@@ -1,0 +1,33 @@
+"""Paper Fig. 13 'standard Llama' parity: on a homogeneous model Jenga must
+match PagedAttention — here we measure the host allocator's ops/sec and the
+waste on a homogeneous trace (expected ~0 for both)."""
+from __future__ import annotations
+
+import time
+
+from . import model_specs as M
+from .sim import run_sim
+from .workloads import sharegpt_like
+
+
+def main(report=print):
+    specs = M.llama3_8b()
+    reqs = sharegpt_like(64)
+    rows = {}
+    for mode in ("jenga", "paged"):
+        t0 = time.perf_counter()
+        res = run_sim(specs, reqs, pool_bytes=6 << 30, chunk=2048,
+                      mode=mode, max_running=64)
+        dt = time.perf_counter() - t0
+        tokens = sum(r.prompt_len + r.output_len for r in reqs)
+        rows[mode] = dt
+        peak_waste = max(res.waste_units) / max(1, max(res.used_units))
+        report(f"alloc_overhead_{mode},{dt*1e6/max(1,res.steps):.0f},"
+               f"alloc_tokens_per_s={tokens/dt:.0f} "
+               f"peak_waste_frac={peak_waste:.4f} steps={res.steps}")
+    ratio = rows["jenga"] / max(1e-9, rows["paged"])
+    report(f"alloc_overhead_ratio,0,jenga_vs_paged_host_time={ratio:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

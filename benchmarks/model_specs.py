@@ -1,0 +1,80 @@
+"""Paper-model KV-spec sets at REAL scale (for allocator replays).
+
+These mirror the paper's evaluated models (Table 1) — Llama-3.2-Vision 11B,
+Gemma-2 27B, Ministral 8B, Jamba 52B, plus standard Llama 8B — as layer-type
+spec lists with true per-token KV sizes (bf16 units)."""
+from repro.core.spec import (attention_spec, cross_attention_spec,
+                             mamba_spec, vision_embed_spec)
+
+TPP = 16
+
+
+def llama_vision_11b(tpp=TPP):
+    """32 self-attn + 8 cross-attn layers, GQA kv=8, hd=128 (mllama)."""
+    return [
+        attention_spec("full_attn", num_layers=32, kv_heads=8, head_dim=128,
+                       tokens_per_page=tpp),
+        cross_attention_spec("cross_attn", num_layers=8, kv_heads=8,
+                             head_dim=128, tokens_per_page=tpp),
+    ]
+
+
+def gemma2_27b(tpp=TPP):
+    """46 layers alternating full / SWA(4096), kv=16, hd=128."""
+    return [
+        attention_spec("full_attn", num_layers=23, kv_heads=16, head_dim=128,
+                       tokens_per_page=tpp),
+        attention_spec("swa", num_layers=23, kv_heads=16, head_dim=128,
+                       tokens_per_page=tpp, kind="swa", sliding_window=4096),
+    ]
+
+
+def ministral_8b(tpp=TPP):
+    """36 layers, interleaved sliding window 32k over 128k ctx: model as
+    1/4 full + 3/4 SWA(32768), kv=8 hd=128."""
+    return [
+        attention_spec("full_attn", num_layers=9, kv_heads=8, head_dim=128,
+                       tokens_per_page=tpp),
+        attention_spec("swa", num_layers=27, kv_heads=8, head_dim=128,
+                       tokens_per_page=tpp, kind="swa", sliding_window=32768),
+    ]
+
+
+def jamba_52b(tpp=TPP):
+    """4 attn + 24 mamba + 4 moe-attn-ish: 8 attn layers kv=8 hd=128 +
+    24 mamba layers (d_state 16, d_inner 8192 -> big states)."""
+    return [
+        attention_spec("full_attn", num_layers=8, kv_heads=8, head_dim=128,
+                       tokens_per_page=tpp),
+        mamba_spec("mamba", num_layers=24,
+                   conv_units=2 * 3 * (8192 + 2 * 16),
+                   ssm_units=2 * 8192 * 16),
+    ]
+
+
+def llama3_8b(tpp=TPP):
+    """Standard homogeneous model (overhead parity check)."""
+    return [
+        attention_spec("full_attn", num_layers=32, kv_heads=8, head_dim=128,
+                       tokens_per_page=tpp),
+    ]
+
+
+def vlm_with_vision_cache(tpp=TPP, hidden=4096):
+    """LLaVA-OneVision-like: vision embedding cache + LLM KV."""
+    return [
+        attention_spec("full_attn", num_layers=28, kv_heads=4, head_dim=128,
+                       tokens_per_page=tpp),
+        vision_embed_spec("vision_embed", hidden_units=hidden,
+                          tokens_per_page=tpp),
+    ]
+
+
+def danube3_4b(tpp=TPP):
+    """h2o-danube3-like: 12 full + 12 SWA(4096), kv=8 hd=120 -> use hd=128."""
+    return [
+        attention_spec("full_attn", num_layers=12, kv_heads=8, head_dim=128,
+                       tokens_per_page=tpp),
+        attention_spec("swa", num_layers=12, kv_heads=8, head_dim=128,
+                       tokens_per_page=tpp, kind="swa", sliding_window=4096),
+    ]

@@ -1,0 +1,179 @@
+"""Allocator-replay simulator: drives the REAL Jenga manager + scheduler at
+production scale (real layer-type specs, real page math) without model
+execution — the paper's memory/batch-size figures (15, 16) are allocator
+properties, so this replays them exactly and fast."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.manager import JengaKVCacheManager
+from repro.core.request import SequenceState
+from repro.core.spec import KVCacheSpec
+
+from .workloads import SimRequest
+
+
+@dataclasses.dataclass
+class SimResult:
+    steps: int
+    decode_batch_sizes: List[int]
+    used_units: List[int]
+    waste_units: List[int]          # allocated-but-unneeded (vs ideal need)
+    free_units: List[int]
+    total_units: int
+    finished: int
+    preemptions: int
+    prefix_hit_tokens: int = 0
+    prefix_query_tokens: int = 0
+    prefill_tokens_computed: int = 0   # includes preemption recompute
+
+
+def ideal_need_units(mgr: JengaKVCacheManager, seq: SequenceState) -> int:
+    """What an ideal allocator would hold for this sequence right now:
+    full-attn tokens, window-only SWA, state pages, image-only mm tokens."""
+    n = 0
+    for spec in mgr.specs:
+        if spec.kind in ("mamba", "rwkv"):
+            n += spec.page_units
+        elif spec.kind == "swa":
+            w = min(spec.sliding_window, seq.num_computed)
+            n += spec.pages_for_tokens(max(1, w)) * spec.page_units
+        elif spec.kind in ("vision_embed", "cross_attn"):
+            toks = sum(it.length for it in (seq.encoder_items or seq.mm_items)
+                       if it.start < seq.num_computed)
+            n += spec.pages_for_tokens(toks) * spec.page_units if toks else 0
+        else:
+            n += spec.pages_for_tokens(max(1, seq.num_computed)) \
+                * spec.page_units
+    return n
+
+
+def run_sim(specs: Sequence[KVCacheSpec], requests: List[SimRequest], *,
+            pool_bytes: int, chunk: int = 2048, max_running: int = 64,
+            mode: str = "jenga", prefix_caching: bool = False,
+            seed: int = 0, max_steps: int = 100_000) -> SimResult:
+    """mode: 'jenga' | 'paged' (no retirement, full-prefix-only policies,
+    mm pages for every token) | 'max' (MAX-page geometry)."""
+    baseline = mode in ("paged", "max")
+    mgr = JengaKVCacheManager(
+        specs, total_memory_bytes=pool_bytes,
+        mode="max" if mode == "max" else "lcm",
+        enable_prefix_caching=prefix_caching,
+        enable_inflight_retirement=not baseline,
+        seed=seed)
+    if baseline:
+        from repro.core.policies import FullAttentionPolicy
+        for s in mgr.specs:
+            if s.kind in ("swa", "vision_embed", "cross_attn"):
+                mgr.policies[s.name] = FullAttentionPolicy(s)
+        orig = mgr._mm_storage_upto
+        mgr._mm_storage_upto = lambda req, spec, pos: (
+            pos if spec.kind in ("vision_embed", "cross_attn")
+            and not req.encoder_items else orig(req, spec, pos))
+
+    waiting = sorted(requests, key=lambda r: r.arrival)
+    waiting = list(waiting)
+    running: List[Tuple[SimRequest, SequenceState]] = []
+    res = SimResult(0, [], [], [], [], mgr.geometry.total_units, 0, 0)
+    step = 0
+    generated: Dict[str, int] = {}
+
+    def make_tokens(r: SimRequest) -> List[int]:
+        if r.shared_prefix or r.prefix_len:
+            doc = [((r.shared_prefix + 1) * 131 + i) % 50000
+                   for i in range(r.prefix_len)]
+            rng = np.random.default_rng(hash(r.rid) & 0xFFFF)
+            q = rng.integers(0, 50000, r.prompt_len - r.prefix_len).tolist()
+            return doc + [int(x) for x in q]
+        rng = np.random.default_rng(hash(r.rid) & 0xFFFF)
+        return [int(x) for x in rng.integers(0, 50000, r.prompt_len)]
+
+    while (waiting or running) and step < max_steps:
+        # admit
+        while waiting and len(running) < max_running:
+            r = waiting[0]
+            seq = SequenceState(rid=r.rid, tokens=make_tokens(r),
+                                mm_items=r.mm_items)
+            ok, _ = mgr.begin_request(seq)
+            if not ok:
+                break
+            waiting.pop(0)
+            generated[r.rid] = 0
+            running.append((r, seq))
+        # one prefill chunk
+        did_prefill = False
+        for r, seq in running:
+            if seq.num_computed < r.prompt_len:
+                target = min(r.prompt_len, seq.num_computed + chunk)
+                ok = mgr.allocate_for_tokens(seq, target)
+                while not ok and len(running) > 1:
+                    vr, vs = running[-1]
+                    if vs is seq:
+                        break
+                    mgr.preempt_request(vs)
+                    res.preemptions += 1
+                    waiting.insert(0, vr)
+                    running.pop()
+                    ok = mgr.allocate_for_tokens(seq, target)
+                if ok:
+                    res.prefill_tokens_computed += target - seq.num_computed
+                    mgr.advance(seq, target - seq.num_computed)
+                    mgr.consume_mm(seq, seq.num_computed)
+                    if prefix_caching:
+                        mgr.touch(seq)
+                    did_prefill = True
+                break
+        # decodes
+        decode_batch = 0
+        finished_now = []
+        for r, seq in list(running):
+            if seq.num_computed < r.prompt_len:
+                continue
+            seq.append_token(41000 + generated[r.rid])
+            ok = mgr.allocate_for_tokens(seq, seq.num_tokens)
+            while not ok:
+                victim = None
+                for cand in reversed(running):
+                    if cand[1] is not seq:
+                        victim = cand
+                        break
+                if victim is None:
+                    break
+                mgr.preempt_request(victim[1])
+                res.preemptions += 1
+                running.remove(victim)
+                waiting.insert(0, victim[0])
+                ok = mgr.allocate_for_tokens(seq, seq.num_tokens)
+            if not ok:
+                continue
+            mgr.advance(seq, 1)
+            if prefix_caching and step % 8 == 0:
+                mgr.touch(seq)
+            decode_batch += 1
+            generated[r.rid] += 1
+            if generated[r.rid] >= r.output_len:
+                finished_now.append((r, seq))
+        for r, seq in finished_now:
+            mgr.free_request(seq, cache=prefix_caching)
+            running.remove((r, seq))
+            res.finished += 1
+        # metrics
+        stats = mgr.memory_stats()
+        ideal = sum(ideal_need_units(mgr, seq) for _, seq in running)
+        res.decode_batch_sizes.append(decode_batch)
+        res.used_units.append(stats.used_units)
+        res.waste_units.append(max(0, stats.used_units + stats.empty_units
+                                   - ideal))
+        res.free_units.append(stats.free_units)
+        step += 1
+        if not did_prefill and decode_batch == 0 and not waiting and running:
+            break  # stuck (pool too small for a single request)
+        if res.preemptions > 50 * max(1, len(requests)):
+            break  # thrashing: pool can't make progress under this scheme
+    res.steps = step
+    res.prefix_hit_tokens = mgr.prefix_hit_tokens_total
+    res.prefix_query_tokens = mgr.prefix_query_tokens_total
+    return res

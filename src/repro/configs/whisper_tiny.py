@@ -1,0 +1,4 @@
+"""Alias module for the whisper_tiny assigned architecture config."""
+from .archs import WHISPER_TINY as CONFIG
+
+CONFIG = CONFIG

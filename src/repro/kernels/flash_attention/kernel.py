@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: flash prefill attention (causal + sliding window).
+
+Grid: (B*H, nQ, nKV) — kv blocks innermost (sequential); online-softmax
+state in VMEM scratch. Q/K/V tiles are (blk, D) with D on lanes; the MXU
+sees (blk_q x D) @ (D x blk_k) matmuls.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, blk_q: int, blk_k: int, causal: bool, window: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    n_k = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                    # (blk_q, D)
+    k = k_ref[0].astype(jnp.float32)                    # (blk_k, D)
+    v = v_ref[0].astype(jnp.float32)
+    d = q.shape[-1]
+    logit = (q * (1.0 / d ** 0.5)) @ k.T                # (blk_q, blk_k)
+
+    q_pos = qi * blk_q + jax.lax.broadcasted_iota(
+        jnp.int32, (blk_q, blk_k), 0)
+    k_pos = ki * blk_k + jax.lax.broadcasted_iota(
+        jnp.int32, (blk_q, blk_k), 1)
+    mask = jnp.ones_like(logit, dtype=jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    logit = jnp.where(mask, logit, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logit, axis=-1))
+    p = jnp.exp(logit - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _final():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_tpu(q, k, v, *, causal=True, window=0,
+                        blk_q=128, blk_k=128, interpret=True):
+    """q: (BH, T, D); k/v: (BH, S, D). Returns (BH, T, D)."""
+    bh, t, d = q.shape
+    s = k.shape[1]
+    blk_q = min(blk_q, t)
+    blk_k = min(blk_k, s)
+    assert t % blk_q == 0 and s % blk_k == 0, (t, s, blk_q, blk_k)
+    grid = (bh, t // blk_q, s // blk_k)
+    kernel = functools.partial(_kernel, blk_q=blk_q, blk_k=blk_k,
+                               causal=causal, window=window)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_q, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, blk_k, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, blk_k, d), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, d), lambda b, qi, ki: (b, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q, d), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((bh, t, d), q.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(q, k, v)

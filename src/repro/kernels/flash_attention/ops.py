@@ -1,0 +1,16 @@
+"""Jitted wrapper for the flash attention kernel."""
+from functools import partial
+
+import jax
+
+from .kernel import flash_attention_tpu
+from .ref import flash_attention_ref
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "use_kernel"))
+def flash(q, k, v, *, causal=True, window=0, use_kernel=True):
+    if use_kernel:
+        return flash_attention_tpu(
+            q, k, v, causal=causal, window=window,
+            interpret=jax.default_backend() != "tpu")
+    return flash_attention_ref(q, k, v, causal=causal, window=window)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    bh, t, d = q.shape
+    s = k.shape[1]
+    logit = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32),
+                       k.astype(jnp.float32)) / (d ** 0.5)
+    qp = jnp.arange(t)[:, None]
+    kp = jnp.arange(s)[None, :]
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= kp > qp - window
+    logit = jnp.where(mask[None], logit, NEG_INF)
+    p = jnp.exp(logit - logit.max(-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bts,bsd->btd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,15 @@
+"""Jitted wrapper for the Mamba2 chunk-scan kernel."""
+from functools import partial
+
+import jax
+
+from .kernel import mamba_chunk_scan
+from .ref import mamba_scan_ref
+
+
+@partial(jax.jit, static_argnames=("chunk", "use_kernel"))
+def mamba_scan(x, bm, cm, dt, a_log, *, chunk=64, use_kernel=True):
+    if use_kernel:
+        return mamba_chunk_scan(x, bm, cm, dt, a_log, chunk=chunk,
+                                interpret=jax.default_backend() != "tpu")
+    return mamba_scan_ref(x, bm, cm, dt, a_log)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle: token-sequential Mamba2 recurrence."""
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(x, bm, cm, dt, a_log):
+    """Sequential recurrence: S_t = exp(-dt_t e^{A}) S + dt_t x_t B_t^T;
+    y_t = C_t . S_t."""
+    b, t, h, p = x.shape
+    n = bm.shape[-1]
+    decay_rate = -jnp.exp(a_log.astype(jnp.float32))        # (H,)
+
+    def step(s, inp):
+        xt, bt, ct, dtt = inp                               # (B,H,P),(B,N)...
+        dec = jnp.exp(dtt * decay_rate[None])               # (B,H)
+        s = s * dec[..., None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dtt, xt, bt)
+        y = jnp.einsum("bn,bhpn->bhp", ct, s)
+        return s, y
+
+    s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(bm.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(cm.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0))
+    _, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1)                           # (B,T,H,P)

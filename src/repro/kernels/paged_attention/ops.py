@@ -1,0 +1,24 @@
+"""Jitted wrapper: Pallas kernel on TPU, interpret-mode kernel elsewhere."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import paged_decode_attention
+from .ref import paged_decode_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("window", "use_kernel"))
+def paged_decode(q, kv_view, tables, page_pos, positions, *, window=0,
+                 use_kernel=True):
+    if use_kernel:
+        return paged_decode_attention(
+            q, kv_view, tables, page_pos, positions, window=window,
+            interpret=not _on_tpu())
+    return paged_decode_attention_ref(
+        q, kv_view, tables, page_pos, positions, window=window)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the paged decode attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_decode_attention_ref(q, kv_view, tables, page_pos, positions, *,
+                               window: int = 0):
+    """Same contract as kernel.paged_decode_attention."""
+    b, kvl, g, d = q.shape
+    vp, _, tpp, _, _ = kv_view.shape
+    pages = jnp.take(kv_view, jnp.maximum(tables, 0), axis=0)
+    # (B, P, 2, TPP, KVL, D)
+    k = pages[:, :, 0].reshape(b, -1, kvl, d).astype(jnp.float32)
+    v = pages[:, :, 1].reshape(b, -1, kvl, d).astype(jnp.float32)
+    slot_pos = (page_pos[:, :, None]
+                + jnp.arange(tpp)[None, None, :]).reshape(b, -1)
+    mask = slot_pos <= positions[:, None]
+    if window:
+        mask &= slot_pos > (positions[:, None] - window)
+    scale = 1.0 / (d ** 0.5)
+    logit = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32) * scale, k)
+    logit = jnp.where(mask[:, None, None, :], logit, NEG_INF)
+    m = jnp.max(logit, axis=-1, keepdims=True)
+    p = jnp.exp(logit - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", p / jnp.maximum(l, 1e-30), v)
+    return out.astype(q.dtype)

@@ -1,0 +1,172 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+No device allocation — these are abstract shapes fed to
+``jax.jit(...).lower()``. Page tables are sized to exactly the workload's KV
+footprint (rounded to the LCM geometry), so ``memory_analysis`` proves the
+production fit."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeSpec
+from ..core.spec import lcm as _lcm
+from ..models.lm import DecodeBatch
+from ..models.tp import Dist
+
+I32 = jnp.int32
+
+
+def sds(shape, dtype=I32):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+@dataclasses.dataclass
+class Cell:
+    """One dry-run cell: abstract inputs + metadata."""
+
+    kind: str                  # train | prefill | decode
+    args: Tuple
+    kwargs: Dict[str, Any]
+    buffer_units: int          # per (data-shard, tp-shard) device
+    notes: Dict[str, Any]
+
+
+def buffer_units_for(model, cfg: ModelConfig, tokens_per_shard: int,
+                     seqs_per_shard: int, enc_tokens_per_shard: int = 0,
+                     margin: float = 1.05) -> int:
+    """Units one device's pool needs for the workload, LCM-rounded.
+
+    Attention-token counts are already divided by the KV replica factor
+    by the caller (replica-group KV sequence split, DESIGN.md §5)."""
+    units = 0
+    for s in model.kv_specs():
+        if s.kind in ("mamba", "rwkv"):
+            units += seqs_per_shard * s.page_units
+        elif s.kind == "cross_attn":
+            units += s.pages_for_tokens(max(1, enc_tokens_per_shard)) \
+                * s.page_units * seqs_per_shard
+        elif s.kind == "swa":
+            # Jenga retires out-of-window pages: pool holds window only
+            w = min(s.sliding_window + s.tokens_per_page, tokens_per_shard)
+            units += s.pages_for_tokens(w) * s.page_units * seqs_per_shard
+        else:
+            units += s.pages_for_tokens(tokens_per_shard) * s.page_units \
+                * seqs_per_shard
+    big = _lcm([s.page_units for s in model.kv_specs()])
+    units = int(units * margin)
+    # +1 large page: SCRATCH target for dropped dus writes (attention.py)
+    return (-(-units // big) + 1) * big
+
+
+def serve_cell(model, cfg: ModelConfig, shape: ShapeSpec, dist: Dist) -> Cell:
+    tpp = cfg.tokens_per_page
+    B, S = shape.global_batch, shape.seq_len
+    prefill = shape.kind == "prefill"
+    sp = dist.sp
+    tp = dist.tp
+    repl = model.ri.get("repl", 1) if isinstance(model.ri, dict) else 1
+    if sp:
+        s_dim = dist.mesh.shape["data"]
+        b_loc = B
+        seq_per_shard = -(-S // s_dim)
+    else:
+        s_dim = dist.dp
+        assert B % s_dim == 0, (B, s_dim)
+        b_loc = B // s_dim
+        seq_per_shard = S
+    # replica-group KV sequence split: each of the `repl` replicas of a kv
+    # group holds 1/repl of the attention pages
+    attn_tokens_per_shard = -(-seq_per_shard // max(1, repl))
+    T = S if prefill else 1
+    specs = {s.name: s for s in model.kv_specs()}
+    tables, page_pos, write_eids, state_eids = {}, {}, {}, {}
+    enc_seq = cfg.encoder_seq if cfg.family == "encdec" else 0
+    for name, s in specs.items():
+        if s.kind in ("mamba", "rwkv"):
+            state_eids[name] = sds((s_dim, b_loc))
+            continue
+        if s.kind == "cross_attn":
+            npg = s.pages_for_tokens(enc_seq)
+            tables[name] = sds((s_dim, tp, b_loc, npg))
+            page_pos[name] = sds((s_dim, tp, b_loc, npg))
+            continue
+        if s.kind == "swa":
+            npg = s.pages_for_tokens(
+                min(s.sliding_window + tpp, attn_tokens_per_shard)) + 1
+        else:
+            npg = s.pages_for_tokens(attn_tokens_per_shard)
+        tables[name] = sds((s_dim, tp, b_loc, npg))
+        page_pos[name] = sds((s_dim, tp, b_loc, npg))
+        write_eids[name] = sds((s_dim, tp, b_loc, T))
+    extra: Dict[str, Any] = {}
+    if cfg.family == "encdec":
+        extra["enc_lens"] = sds((B,))
+        if prefill:
+            extra["enc_embeds"] = sds((B, enc_seq, cfg.d_model), jnp.bfloat16)
+            extra["enc_write_eids"] = sds((s_dim, tp, b_loc, enc_seq))
+    if cfg.family == "vlm" and prefill:
+        extra["mm_embeds"] = sds((B, T, cfg.d_model), jnp.bfloat16)
+        extra["mm_mask"] = sds((B, T), jnp.bool_)
+        extra["mrope_pos"] = sds((3, B, T))
+    batch = DecodeBatch(
+        tokens=sds((B, T)),
+        positions=sds((B, T)),
+        seq_lens=sds((B,)),
+        tables=tables, page_pos=page_pos, write_eids=write_eids,
+        state_eids=state_eids,
+        last_idx=sds((B,)) if prefill else None,
+        **extra)
+    bunits = buffer_units_for(
+        model, cfg,
+        tokens_per_shard=attn_tokens_per_shard,
+        seqs_per_shard=b_loc,
+        enc_tokens_per_shard=enc_seq)
+    return Cell(kind=shape.kind,
+                args=(sds((s_dim, dist.tp, bunits), jnp.bfloat16), batch),
+                kwargs={"prefill": prefill},
+                buffer_units=bunits,
+                notes=dict(B=B, S=S, b_loc=b_loc, s_dim=s_dim, sp=sp,
+                           kv_repl_split=repl))
+
+
+def train_cell(model, cfg: ModelConfig, shape: ShapeSpec, dist: Dist,
+               micro_batches: int = 1) -> Cell:
+    B, S = shape.global_batch, shape.seq_len
+    kwargs = {}
+    if cfg.family == "encdec":
+        kwargs["enc_embeds"] = sds((B, cfg.encoder_seq, cfg.d_model),
+                                   jnp.bfloat16)
+    if cfg.family == "vlm":
+        kwargs["mm_embeds"] = sds((B, S, cfg.d_model), jnp.bfloat16)
+        kwargs["mm_mask"] = sds((B, S), jnp.bool_)
+        kwargs["mrope_pos"] = sds((3, B, S))
+    return Cell(kind="train", args=(sds((B, S)), sds((B, S))),
+                kwargs=kwargs, buffer_units=0,
+                notes=dict(B=B, S=S, micro_batches=micro_batches))
+
+
+def default_micro_batches(cfg: ModelConfig) -> int:
+    """Microbatch count so train activations/dispatch fit a 16G chip
+    (validated against the dry-run memory_analysis; see EXPERIMENTS.md)."""
+    if cfg.num_experts >= 64:
+        return 32
+    if cfg.num_experts > 0:
+        return 16
+    if cfg.d_model >= 5120:
+        return 16
+    if cfg.d_model >= 3000:
+        return 4
+    if cfg.family == "ssm":
+        return 8
+    return 4
+
+
+def wants_fsdp(cfg: ModelConfig) -> bool:
+    """Enable FSDP for training when TP16-sharded weights alone would
+    crowd a 16GB chip (counting fp32 grads + Adam moments)."""
+    return cfg.d_model * cfg.d_ff * cfg.num_layers >= 24 * 5120 * 13824

@@ -1,0 +1,3 @@
+from .lm import DecodeBatch, DecoderLM
+from .registry import build_model
+from .tp import Dist, single_device_dist

@@ -1,0 +1,350 @@
+"""Transformer blocks (attention / MLP / MoE) — local code inside shard_map.
+
+All functions take *local* param slices (leading tp dim already consumed by
+shard_map's in_specs and squeezed by the caller) and replicated activations
+(B, T, d); tensor-parallel reductions are explicit ``psum`` over the tp axis.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from .common import dense, rms_norm
+from .rotary import apply_mrope, apply_rope
+from .tp import Dist, psum_tp
+
+
+# ---------------------------------------------------------------- attention
+def qkv_proj(p, xn, *, kv_local: int, head_dim: int, positions,
+             rope_theta: float, mrope_positions=None, use_rope=True):
+    """Project + rope. Returns q (B,T,KVL,G,D), k, v (B,T,KVL,D)."""
+    b, t, _ = xn.shape
+    q = dense(xn, p["q"], p.get("q_bias"))
+    k = dense(xn, p["k"], p.get("k_bias"))
+    v = dense(xn, p["v"], p.get("v_bias"))
+    q = q.reshape(b, t, -1, head_dim)
+    k = k.reshape(b, t, kv_local, head_dim)
+    v = v.reshape(b, t, kv_local, head_dim)
+    if use_rope:
+        if mrope_positions is not None:
+            q = apply_mrope(q, mrope_positions, rope_theta)
+            k = apply_mrope(k, mrope_positions, rope_theta)
+        else:
+            q = apply_rope(q, positions, rope_theta)
+            k = apply_rope(k, positions, rope_theta)
+    q = A.group_q(q, kv_local)
+    return q, k, v
+
+
+def attn_train(p, x, dist: Dist, *, kv_local, head_dim, window=0,
+               rope_theta=1e6, positions=None, mrope_positions=None,
+               causal=True, norm_eps=1e-5, q_block=1024):
+    """Full/SWA self-attention for training (no cache)."""
+    b, t, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    xn = rms_norm(x, p["attn_norm"], norm_eps)
+    q, k, v = qkv_proj(p, xn, kv_local=kv_local, head_dim=head_dim,
+                       positions=positions, rope_theta=rope_theta,
+                       mrope_positions=mrope_positions)
+
+    # outer scan over q chunks keeps the score tensor bounded
+    nq = -(-t // q_block)
+    pad = nq * q_block - t
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0))) if pad else q
+
+    def qchunk(carry, inp):
+        qc, off = inp
+        out = A.flash_attention(qc, k, v, causal=causal, window=window,
+                                q_offset=off)
+        return carry, out
+
+    qblocks = qp.reshape(b, nq, q_block, *q.shape[2:])
+    offs = jnp.arange(nq) * q_block
+    _, outs = jax.lax.scan(qchunk, None, (jnp.moveaxis(qblocks, 1, 0), offs))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, nq * q_block, -1)
+    out = out[:, :t]
+    y = dense(out, p["o"])
+    return x + psum_tp(y, dist)
+
+
+def attn_gather(buf, view_shape, tables, page_pos, layer):
+    """Phase 1 (READ): gather this layer's old pages + absolute positions.
+    Must run before any buffer write in the same scan iteration (in-place
+    aliasing: see EXPERIMENTS.md 'buffer-copy' study)."""
+    view = buf.reshape(view_shape)
+    k_all, v_all = A.gather_pages(view, tables, layer)
+    b = tables.shape[0]
+    tpp = view_shape[3]
+    s = k_all.shape[1]
+    slot_pos = (page_pos[:, :, None] + jnp.arange(tpp)[None, None, :]
+                ).reshape(b, s)
+    return k_all, v_all, slot_pos
+
+
+def attn_compute(p, x, gathered, dist: Dist, *, kv_local, head_dim,
+                 positions, seq_lens, window=0, rope_theta=1e6,
+                 mrope_positions=None, norm_eps=1e-5, prefill=False,
+                 sp_axis: Optional[str] = None, kv_groups=None):
+    """Phase 2 (COMPUTE): attention over gathered old pages + this step's
+    fresh K/V (still in registers — the buffer write happens in phase 3).
+
+    Old-page masking uses ``slot_pos < positions[:, :1]`` (strictly before
+    the chunk start): the chunk's own slots are not yet written. The fresh
+    part is intra-chunk causal attention merged via partial-softmax, after
+    the old part was combined across KV-replica groups / SP shards (the
+    fresh part is replicated on all shards, so it merges locally exactly
+    once). Returns (x_out, k_fresh, v_fresh)."""
+    k_all, v_all, slot_pos = gathered
+    b, t, _ = x.shape
+    xn = rms_norm(x, p["attn_norm"], norm_eps)
+    q, k, v = qkv_proj(p, xn, kv_local=kv_local, head_dim=head_dim,
+                       positions=positions, rope_theta=rope_theta,
+                       mrope_positions=mrope_positions)
+    chunk_start = positions[:, :1]                             # (B, 1)
+    if prefill:
+        o, m, l = _prefill_flash(q, k_all, v_all, slot_pos, positions,
+                                 chunk_start=chunk_start, window=window)
+    else:
+        mask = slot_pos[:, None, :] < chunk_start[:, :, None]  # strict
+        if window:
+            mask &= slot_pos[:, None, :] > positions[:, :, None] - window
+        o, m, l = A.attend_tokens(q, k_all, v_all, mask)
+    if kv_groups is not None:
+        o, m, l = A.combine_partials(o, m, l, dist.tp_axis, groups=kv_groups)
+    if sp_axis is not None:
+        o, m, l = A.combine_partials(o, m, l, sp_axis)
+    # fresh (intra-chunk) part: causal within the chunk
+    if t == 1:
+        mask_f = jnp.ones((b, 1, 1), bool)
+        of, mf, lf = A.attend_tokens(q, k, v, mask_f)
+    elif t <= 256:
+        mask_f = positions[:, None, :] <= positions[:, :, None]
+        if window:
+            mask_f &= positions[:, None, :] > positions[:, :, None] - window
+        of, mf, lf = A.attend_tokens(q, k, v, mask_f)
+    else:
+        of, mf, lf = A.flash_attention_partials(
+            q, k, v, causal=True, window=window)
+    o, m, l = A.merge_partials(o, m, l, of, mf, lf)
+    out = A.finalize_softmax(o, l).reshape(b, t, -1).astype(x.dtype)
+    y = dense(out, p["o"])
+    return x + psum_tp(y, dist), k, v
+
+
+def attn_write(buf, view_shape, layer, write_eids, positions, k, v):
+    """Phase 3 (WRITE): stream this step's K/V into its pages."""
+    tpp = view_shape[3]
+    return A.write_token_kv(buf, view_shape, layer, write_eids,
+                            positions % tpp, k, v)
+
+
+def attn_cached(p, x, buf, view_shape, dist: Dist, *, layer, kv_local,
+                head_dim, tables, page_pos, write_eids, positions, seq_lens,
+                window=0, rope_theta=1e6, mrope_positions=None,
+                norm_eps=1e-5, prefill=False, sp_axis: Optional[str] = None,
+                kv_groups=None):
+    """Convenience gather->compute->write for one attention layer per scan
+    iteration. Models with several attention layers per iteration must call
+    the phases separately (all gathers before any write)."""
+    gathered = attn_gather(buf, view_shape, tables, page_pos, layer)
+    x, k, v = attn_compute(
+        p, x, gathered, dist, kv_local=kv_local, head_dim=head_dim,
+        positions=positions, seq_lens=seq_lens, window=window,
+        rope_theta=rope_theta, mrope_positions=mrope_positions,
+        norm_eps=norm_eps, prefill=prefill, sp_axis=sp_axis,
+        kv_groups=kv_groups)
+    buf = attn_write(buf, view_shape, layer, write_eids, positions, k, v)
+    return x, buf
+
+
+def _prefill_flash(q, k, v, slot_pos, q_pos, *, window, chunk_start=None,
+                   block=512):
+    """Flash attention over OLD pages for a prefill chunk.
+    Returns un-normalized partials (acc, m, l) for cross-shard combining.
+
+    chunk_start: (B,1) — old slots are valid iff slot_pos < chunk_start
+    (the chunk itself attends via the fresh-KV path).
+    q: (B,T,KVL,G,D); k/v: (B,S,KVL,D); slot_pos: (B,S); q_pos: (B,T)."""
+    b, t, kvl, g, d = q.shape
+    s = k.shape[1]
+    scale = 1.0 / (d ** 0.5)
+    qf = q * scale
+    nblk = -(-s // block)
+    pad = nblk * block - s
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        slot_pos = jnp.pad(slot_pos, ((0, 0), (0, pad)),
+                           constant_values=jnp.iinfo(jnp.int32).max // 2)
+    kb = k.reshape(b, nblk, block, kvl, d)
+    vb = v.reshape(b, nblk, block, kvl, d)
+    pb = slot_pos.reshape(b, nblk, block)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, pblk = blk
+        logit = jnp.einsum("btkgd,bjkd->bkgtj", qf, kblk,
+                           preferred_element_type=jnp.float32)
+        if chunk_start is not None:
+            mask = jnp.broadcast_to(
+                pblk[:, None, :] < chunk_start[:, :, None], 
+                (pblk.shape[0], q_pos.shape[1], pblk.shape[1]))
+        else:
+            mask = pblk[:, None, :] <= q_pos[:, :, None]       # (B,T,blk)
+        if window:
+            mask &= pblk[:, None, :] > q_pos[:, :, None] - window
+        mask = mask[:, None, None]                             # (B,1,1,T,blk)
+        logit = jnp.where(mask, logit, A.NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logit, axis=-1))
+        pexp = jnp.exp(logit - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(pexp, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgtj,bjkd->bkgtd", pexp.astype(vblk.dtype), vblk,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvl, g, t), A.NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvl, g, t), jnp.float32)
+    a0 = jnp.zeros((b, kvl, g, t, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0),
+         jnp.moveaxis(pb, 1, 0)))
+    return acc, m, l
+
+
+def cross_attn_cached(p, x, view, dist: Dist, *, layer, kv_local, head_dim,
+                      tables, enc_lens, norm_eps=1e-5):
+    """Cross-attention reading encoder KV from cross-attn pages (read-only;
+    caller passes the reshape view)."""
+    b, t, _ = x.shape
+    tpp = view.shape[3]
+    xn = rms_norm(x, p["attn_norm"], norm_eps)
+    q = dense(xn, p["q"]).reshape(b, t, -1, head_dim)
+    q = A.group_q(q, kv_local)
+    k_all, v_all = A.gather_pages(view, tables, layer)
+    s = k_all.shape[1]
+    slot_idx = jnp.arange(s)[None]                             # (1, S)
+    mask = jnp.broadcast_to(slot_idx < enc_lens[:, None], (b, s))
+    mask = jnp.broadcast_to(mask[:, None, :], (b, t, s))
+    o, m, l = A.attend_tokens(q, k_all, v_all, mask)
+    out = A.finalize_softmax(o, l).reshape(b, t, -1).astype(x.dtype)
+    y = dense(out, p["o"])
+    return x + psum_tp(y, dist)
+
+
+def write_cross_kv(p, enc_out, buf, view_shape, *, layer, kv_local,
+                   head_dim, write_eids):
+    """Project encoder output and write K/V into cross-attn pages.
+    enc_out: (B, S_enc, d); write_eids: (B, S_enc)."""
+    b, s, _ = enc_out.shape
+    tpp = view_shape[3]
+    k = dense(enc_out, p["k"]).reshape(b, s, kv_local, head_dim)
+    v = dense(enc_out, p["v"]).reshape(b, s, kv_local, head_dim)
+    slots = jnp.broadcast_to(jnp.arange(s)[None] % tpp, (b, s))
+    return A.write_token_kv(buf, view_shape, layer, write_eids, slots, k, v)
+
+
+def cross_attn_train(p, x, enc_out, dist: Dist, *, kv_local, head_dim,
+                     norm_eps=1e-5):
+    b, t, _ = x.shape
+    xn = rms_norm(x, p["attn_norm"], norm_eps)
+    q = dense(xn, p["q"]).reshape(b, t, -1, head_dim)
+    q = A.group_q(q, kv_local)
+    k = dense(enc_out, p["k"]).reshape(b, enc_out.shape[1], kv_local, head_dim)
+    v = dense(enc_out, p["v"]).reshape(b, enc_out.shape[1], kv_local, head_dim)
+    s = k.shape[1]
+    mask = jnp.ones((b, t, s), bool)
+    o, m, l = A.attend_tokens(q, k, v, mask)
+    out = A.finalize_softmax(o, l).reshape(b, t, -1).astype(x.dtype)
+    return x + psum_tp(dense(out, p["o"]), dist)
+
+
+# ---------------------------------------------------------------------- MLP
+def mlp_block(p, x, dist: Dist, norm_eps=1e-5):
+    xn = rms_norm(x, p["mlp_norm"], norm_eps)
+    g = dense(xn, p["gate"])
+    u = dense(xn, p["up"])
+    h = (jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)).astype(x.dtype)
+    y = dense(h, p["down"])
+    return x + psum_tp(y, dist)
+
+
+# ---------------------------------------------------------------------- MoE
+def moe_block(p, x, dist: Dist, *, num_experts, top_k, capacity_factor=1.25,
+              norm_eps=1e-5, aux_weight=0.01, ep_axis: str = "data"):
+    """GShard-style MoE with a 2-D expert sharding (big-model scale):
+    experts over ``ep_axis`` (EP, all_to_all dispatch) x per-expert FFN dim
+    over the tp axis (expert-TP, psum after down-proj). Pods replicate
+    experts, so the all_to_all never crosses the DCN.
+
+    Expert weights local: (E_local, d, ffe_local). Returns (x_out, aux)."""
+    b, t, d = x.shape
+    e = num_experts
+    ep = dist.mesh.shape[ep_axis]
+    e_local = p["moe_gate"].shape[0]
+    assert e_local * ep == e, (e_local, ep, e)
+    xn = rms_norm(x, p["mlp_norm"], norm_eps)
+    tok = xn.reshape(b * t, d)
+    n = tok.shape[0]
+
+    router = jnp.einsum("nd,de->ne", tok.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(router, axis=-1)                    # (N, E)
+    gate_vals, idx = jax.lax.top_k(probs, top_k)               # (N, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros((e,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (n * top_k)
+    aux = aux_weight * e * jnp.sum(me * ce)
+
+    cap = int(max(1, round(n * top_k / e * capacity_factor)))
+    # position of each (token, k) copy within its expert queue
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)           # (N, K, E)
+    flat = onehot.reshape(n * top_k, e)
+    pos = jnp.cumsum(flat, axis=0) * flat - 1                  # (N*K, E)
+    pos_in_e = jnp.max(pos, axis=-1)                           # (N*K,)
+    e_flat = idx.reshape(-1)
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, e_flat * cap + pos_in_e, e * cap)   # drop -> OOB
+
+    dispatch = jnp.zeros((e * cap + 1, d), tok.dtype)
+    src = jnp.repeat(tok, top_k, axis=0)                       # (N*K, d)
+    dispatch = dispatch.at[slot].set(src, mode="drop")
+    dispatch = dispatch[:-1].reshape(e, cap, d)
+
+    # EP all_to_all: (E, C, d) -> (E_local, ep*C, d)
+    shuffled = jax.lax.all_to_all(
+        dispatch.reshape(ep, e_local, cap, d), ep_axis,
+        split_axis=0, concat_axis=0, tiled=False)              # (ep, e_local, C, d)
+    shuffled = jnp.moveaxis(shuffled, 0, 1).reshape(e_local, ep * cap, d)
+
+    # expert-TP: ffe sharded over tp; psum after down-proj
+    g = jnp.einsum("ecd,edf->ecf", shuffled, p["moe_gate"].astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", shuffled, p["moe_up"].astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    y = jnp.einsum("ecf,efd->ecd", h, p["moe_down"].astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    y = psum_tp(y, dist).astype(x.dtype)
+
+    # return path
+    y = jnp.moveaxis(y.reshape(e_local, ep, cap, d), 1, 0)     # (ep, e_local, C, d)
+    back = jax.lax.all_to_all(y, ep_axis, split_axis=0,
+                              concat_axis=0, tiled=False)
+    back = back.reshape(e * cap, d)
+    back = jnp.concatenate([back, jnp.zeros((1, d), back.dtype)], axis=0)
+
+    gathered = jnp.take(back, jnp.where(keep, slot, e * cap), axis=0)
+    gathered = gathered.reshape(n, top_k, d)
+    out = jnp.sum(gathered.astype(jnp.float32)
+                  * gate_vals[..., None], axis=1).astype(x.dtype)
+    return x + out.reshape(b, t, d), aux

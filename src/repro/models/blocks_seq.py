@@ -1,0 +1,348 @@
+"""Recurrent sequence mixers: Mamba2 (SSD chunked form) and RWKV6.
+
+TPU adaptation (DESIGN.md §3): both mixers are computed in *chunked parallel*
+form — intra-chunk quadratic matmuls (MXU-friendly) + inter-chunk state
+carries — instead of the token-sequential CUDA scans of the reference
+implementations. All decay exponent differences are clamped ≤ 0, so the
+chunked math never overflows.
+
+State layout per layer (local to a tp shard):
+  Mamba2: [ssm_state (H_local*P*N) | conv_state ((W-1)*(d_in_local+2N))]
+  RWKV6:  [wkv_state (H_local*hs*hs) | att_shift (d) | cm_shift (d)]
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense, rms_norm
+from .tp import Dist, psum_tp
+
+
+# ====================================================================== Mamba2
+def mamba2_dims(d_model: int, expand: int, headdim: int, d_state: int,
+                conv_width: int, tp: int):
+    d_inner = expand * d_model
+    heads = d_inner // headdim
+    assert heads % tp == 0, (heads, tp)
+    h_local = heads // tp
+    d_in_local = h_local * headdim
+    ssm_units = h_local * headdim * d_state
+    conv_units = (conv_width - 1) * (d_in_local + 2 * d_state)
+    return dict(d_inner=d_inner, heads=heads, h_local=h_local,
+                d_in_local=d_in_local, ssm_units=ssm_units,
+                conv_units=conv_units)
+
+
+def _causal_conv(x, w, x_init=None):
+    """Depthwise causal conv: x (B,T,C), w (W,C). x_init: (B,W-1,C) carry."""
+    width = w.shape[0]
+    if x_init is None:
+        x_init = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([x_init, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(width))
+    new_state = xp[:, -(width - 1):] if width > 1 else x_init
+    return out, new_state
+
+
+def _mamba_project(p, x, md):
+    """Shared projections for all modes. Returns z, xr, Bm, Cm, dt."""
+    z = dense(x, p["w_z"])                                    # (B,T,d_in_local)
+    xr = dense(x, p["w_x"])
+    Bm = dense(x, p["w_B"])                                   # (B,T,N) replicated
+    Cm = dense(x, p["w_C"])
+    dt = dense(x, p["w_dt"]).astype(jnp.float32)              # (B,T,H_local)
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(jnp.float32))
+    return z, xr, Bm, Cm, dt
+
+
+def mamba2_chunked(p, x, dist: Dist, md: dict, *, d_state: int, headdim: int,
+                   conv_width: int, chunk: int = 128, norm_eps=1e-5,
+                   init_state=None):
+    """Mamba2 over a full sequence (train / prefill).
+
+    x: (B, T, d) replicated. Returns (y, final_state_flat)."""
+    b, t, _ = x.shape
+    hl, dil = md["h_local"], md["d_in_local"]
+    xn = rms_norm(x, p["norm"], norm_eps)
+    z, xr, Bm, Cm, dt = _mamba_project(p, xn, md)
+
+    if init_state is not None:
+        ssm0, conv0 = split_mamba_state(init_state, md, d_state, headdim,
+                                        conv_width)
+    else:
+        ssm0 = jnp.zeros((b, hl, headdim, d_state), jnp.float32)
+        conv0 = jnp.zeros((b, conv_width - 1, dil + 2 * d_state), x.dtype)
+
+    xbc = jnp.concatenate([xr, Bm, Cm], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], conv0)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    xr = xbc[..., :dil]
+    Bm = xbc[..., dil:dil + d_state].astype(jnp.float32)
+    Cm = xbc[..., dil + d_state:].astype(jnp.float32)
+
+    # pad to chunk multiple
+    nchunk = -(-t // chunk)
+    pad = nchunk * chunk - t
+    def padt(a):
+        return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+    xh = padt(xr).reshape(b, nchunk, chunk, hl, headdim)
+    Bc = padt(Bm).reshape(b, nchunk, chunk, d_state)
+    Cc = padt(Cm).reshape(b, nchunk, chunk, d_state)
+    dtc = padt(dt).reshape(b, nchunk, chunk, hl)
+
+    a_log = -jnp.exp(p["A_log"].astype(jnp.float32))          # (H_local,) < 0
+
+    def chunk_step(S, inp):
+        """SSD chunk: intra-chunk quadratic + inter-chunk state carry.
+
+        Contribution of step s to y_t (s<=t) decays by exp(L_t - L_s) <= 0
+        in log space, so no exponent here can overflow."""
+        xck, bck, cck, dck = inp           # (B,L,H,P) (B,L,N) (B,L,N) (B,L,H)
+        ldec = dck * a_log[None, None]     # (B,L,H) <= 0
+        L = jnp.cumsum(ldec, axis=1)       # inclusive
+        # intra-chunk: score_ts = (C_t . B_s) * exp(L_t - L_s) * dt_s, s<=t
+        cb = jnp.einsum("btn,bsn->bts", cck, bck)             # (B,L,L)
+        diff = L[:, :, None, :] - L[:, None, :, :]            # (B,t,s,H)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dec = jnp.exp(jnp.where(mask[None, :, :, None], diff, -jnp.inf))
+        score = cb[..., None] * dec * dck[:, None]            # (B,t,s,H)
+        y = jnp.einsum("btsh,bshp->bthp", score, xck.astype(jnp.float32))
+        # inter-chunk: carry state read, decayed by exp(L_t) <= 1
+        rfac = jnp.exp(L)
+        y += jnp.einsum("btn,bhpn,bth->bthp", cck, S, rfac)
+        # state update: S_out = exp(L_last) S + sum_s exp(L_last-L_s) dt_s x_s B_s
+        sfac = jnp.exp(L[:, -1][:, None, :] - L) * dck        # (B,L,H) <= dt
+        S_add = jnp.einsum("blh,blhp,bln->bhpn", sfac,
+                           xck.astype(jnp.float32), bck)
+        S_new = S * jnp.exp(L[:, -1])[:, :, None, None] + S_add
+        return S_new, y
+
+    (S_fin, ys) = jax.lax.scan(
+        chunk_step, ssm0,
+        (jnp.moveaxis(xh, 1, 0), jnp.moveaxis(Bc, 1, 0),
+         jnp.moveaxis(Cc, 1, 0), jnp.moveaxis(dtc, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nchunk * chunk, hl, headdim)[:, :t]
+    y = y + xr.reshape(b, t, hl, headdim).astype(jnp.float32) \
+        * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, t, dil).astype(x.dtype)
+    y = rms_norm(y, p["out_norm"], norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = dense(y, p["w_out"])
+    out = psum_tp(out, dist)
+    state = flatten_mamba_state(S_fin, conv_state, md)
+    return x + out, state
+
+
+def mamba2_step(p, x, state_flat, dist: Dist, md: dict, *, d_state: int,
+                headdim: int, conv_width: int, norm_eps=1e-5):
+    """Single-token decode. x: (B, 1, d). Returns (y, new_state_flat)."""
+    b = x.shape[0]
+    hl, dil = md["h_local"], md["d_in_local"]
+    ssm, conv = split_mamba_state(state_flat, md, d_state, headdim, conv_width)
+    xn = rms_norm(x, p["norm"], norm_eps)
+    z, xr, Bm, Cm, dt = _mamba_project(p, xn, md)
+    xbc = jnp.concatenate([xr, Bm, Cm], axis=-1)              # (B,1,·)
+    xbc, conv = _causal_conv(xbc, p["conv_w"], conv)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    xr = xbc[:, 0, :dil]
+    Bm = xbc[:, 0, dil:dil + d_state].astype(jnp.float32)
+    Cm = xbc[:, 0, dil + d_state:].astype(jnp.float32)
+    dt = dt[:, 0]                                             # (B,H)
+    a_log = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a_log[None])                         # (B,H)
+    xh = xr.reshape(b, hl, headdim).astype(jnp.float32)
+    ssm = ssm * decay[..., None, None] + \
+        jnp.einsum("bh,bhp,bn->bhpn", dt, xh, Bm)
+    y = jnp.einsum("bn,bhpn->bhp", Cm, ssm)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, dil).astype(x.dtype)
+    y = rms_norm(y, p["out_norm"], norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = psum_tp(dense(y, p["w_out"]), dist)
+    return x + out, flatten_mamba_state(ssm, conv, md)
+
+
+def flatten_mamba_state(ssm, conv, md):
+    b = ssm.shape[0]
+    return jnp.concatenate([
+        ssm.astype(jnp.float32).reshape(b, -1),
+        conv.astype(jnp.float32).reshape(b, -1),
+    ], axis=-1)
+
+
+def split_mamba_state(flat, md, d_state, headdim, conv_width):
+    b = flat.shape[0]
+    hl, dil = md["h_local"], md["d_in_local"]
+    n_ssm = md["ssm_units"]
+    ssm = flat[:, :n_ssm].reshape(b, hl, headdim, d_state).astype(jnp.float32)
+    conv = flat[:, n_ssm:].reshape(b, conv_width - 1, dil + 2 * d_state)
+    return ssm, conv.astype(jnp.bfloat16)
+
+
+# ====================================================================== RWKV6
+def rwkv6_dims(d_model: int, head_size: int, tp: int):
+    heads = d_model // head_size
+    heads_pad = -(-heads // tp) * tp
+    h_local = heads_pad // tp
+    d_att_local = h_local * head_size
+    wkv_units = h_local * head_size * head_size
+    shift_units = 2 * d_model   # att shift + channel-mix shift (replicated)
+    return dict(heads=heads, heads_pad=heads_pad, h_local=h_local,
+                d_att_local=d_att_local, wkv_units=wkv_units,
+                shift_units=shift_units)
+
+
+def _rwkv_mix(x, x_prev, mu):
+    """Token-shift lerp. x,x_prev: (B,T,d); mu: (d,)."""
+    return x + (x_prev - x) * mu.astype(x.dtype)
+
+
+def _rwkv_proj(p, x, x_prev, rd, head_size: int):
+    """Time-mix projections. Returns r,k,v,g (B,T,H,hs), logw (B,T,H,hs)<=0."""
+    b, t, _ = x.shape
+    hl = rd["h_local"]
+    r = dense(_rwkv_mix(x, x_prev, p["mu_r"]), p["w_r"]).reshape(b, t, hl, head_size)
+    k = dense(_rwkv_mix(x, x_prev, p["mu_k"]), p["w_k"]).reshape(b, t, hl, head_size)
+    v = dense(_rwkv_mix(x, x_prev, p["mu_v"]), p["w_v"]).reshape(b, t, hl, head_size)
+    g = dense(_rwkv_mix(x, x_prev, p["mu_g"]), p["w_g"]).reshape(b, t, hl, head_size)
+    # data-dependent decay (the Finch feature): low-rank lora on w
+    xw = _rwkv_mix(x, x_prev, p["mu_w"])
+    ww = jnp.tanh(dense(xw, p["w_lora_a"]).astype(jnp.float32))
+    ww = jnp.einsum("btr,rd->btd", ww, p["w_lora_b"].astype(jnp.float32))
+    ww = ww + p["w_base"].astype(jnp.float32)                 # (B,T,d_att_local)
+    logw = -jnp.exp(ww).reshape(b, t, hl, head_size)          # <= 0
+    return r, k, v, g, logw
+
+
+def rwkv6_chunked(p, x, dist: Dist, rd: dict, *, head_size: int,
+                  chunk: int = 64, norm_eps=1e-5, init_state=None):
+    """RWKV6 time-mix + channel-mix over a sequence. Returns (y, state)."""
+    b, t, d = x.shape
+    hl = rd["h_local"]
+    if init_state is not None:
+        S0, att_shift, cm_shift = split_rwkv_state(init_state, rd, head_size, d)
+    else:
+        S0 = jnp.zeros((b, hl, head_size, head_size), jnp.float32)
+        att_shift = jnp.zeros((b, 1, d), x.dtype)
+        cm_shift = jnp.zeros((b, 1, d), x.dtype)
+
+    # ---- time mix
+    xn = rms_norm(x, p["ln1"], norm_eps)
+    x_prev = jnp.concatenate([att_shift, xn[:, :-1]], axis=1)
+    r, k, v, g, logw = _rwkv_proj(p, xn, x_prev, rd, head_size)
+    u = p["u"].astype(jnp.float32)                            # (H_local, hs)
+
+    nchunk = -(-t // chunk)
+    pad = nchunk * chunk - t
+    def padt(a, val=0.0):
+        return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2),
+                       constant_values=val)
+    rc = padt(r).reshape(b, nchunk, chunk, hl, head_size)
+    kc = padt(k).reshape(b, nchunk, chunk, hl, head_size)
+    vc = padt(v).reshape(b, nchunk, chunk, hl, head_size)
+    wc = padt(logw).reshape(b, nchunk, chunk, hl, head_size)
+
+    def chunk_step(S, inp):
+        rk, kk, vk, lw = (a.astype(jnp.float32) for a in inp)  # (B,L,H,hs)
+        L = jnp.cumsum(lw, axis=1)                             # inclusive
+        Lprev = L - lw                                         # exclusive
+        # intra: score_ts = sum_c r_tc k_sc exp(Lprev_t - L_s), s < t
+        diff = Lprev[:, :, None] - L[:, None]                  # (B,t,s,H,hs)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        dec = jnp.exp(jnp.minimum(
+            jnp.where(mask[None, :, :, None, None], diff, -jnp.inf), 0.0))
+        score = jnp.einsum("bthc,btshc,bshc->bhts", rk, dec, kk)
+        # diagonal bonus term
+        diag = jnp.einsum("bthc,hc,bthc->bth", rk, u, kk)
+        y = jnp.einsum("bhts,bshc->bthc", score, vk)
+        y += diag[..., None] * vk
+        # inter: carry state
+        rdec = rk * jnp.exp(Lprev)
+        y += jnp.einsum("bthk,bhkv->bthv", rdec, S)
+        # state update
+        kdec = kk * jnp.exp(L[:, -1][:, None] - L)
+        S = S * jnp.exp(L[:, -1])[..., None] + \
+            jnp.einsum("bshk,bshv->bhkv", kdec, vk)
+        return S, y
+
+    S_fin, ys = jax.lax.scan(
+        chunk_step, S0,
+        (jnp.moveaxis(rc, 1, 0), jnp.moveaxis(kc, 1, 0),
+         jnp.moveaxis(vc, 1, 0), jnp.moveaxis(wc, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nchunk * chunk, hl, head_size)[:, :t]
+    y = _rwkv_out(p, y, g, dist, b, t, norm_eps)
+    x = x + y
+
+    # ---- channel mix
+    xc = rms_norm(x, p["ln2"], norm_eps)
+    xc_prev = jnp.concatenate([cm_shift, xc[:, :-1]], axis=1)
+    cm = _channel_mix(p, xc, xc_prev, dist)
+    x = x + cm
+    state = flatten_rwkv_state(S_fin, xn[:, -1:], xc[:, -1:], rd)
+    return x, state
+
+
+def rwkv6_step(p, x, state_flat, dist: Dist, rd: dict, *, head_size: int,
+               norm_eps=1e-5):
+    """Single-token decode. x: (B,1,d)."""
+    b, _, d = x.shape
+    hl = rd["h_local"]
+    S, att_shift, cm_shift = split_rwkv_state(state_flat, rd, head_size, d)
+    xn = rms_norm(x, p["ln1"], norm_eps)
+    r, k, v, g, logw = _rwkv_proj(p, xn, att_shift, rd, head_size)
+    rk = r[:, 0].astype(jnp.float32)
+    kk = k[:, 0].astype(jnp.float32)
+    vk = v[:, 0].astype(jnp.float32)
+    w = jnp.exp(logw[:, 0])                                    # (B,H,hs)
+    u = p["u"].astype(jnp.float32)
+    wkv = S + u[None, :, :, None] * jnp.einsum("bhk,bhv->bhkv", kk, vk)
+    y = jnp.einsum("bhk,bhkv->bhv", rk, wkv)[:, None]          # (B,1,H,hs)
+    S = S * w[..., None] + jnp.einsum("bhk,bhv->bhkv", kk, vk)
+    y = _rwkv_out(p, y.reshape(b, 1, hl, head_size), g, dist, b, 1, norm_eps)
+    x = x + y
+    xc = rms_norm(x, p["ln2"], norm_eps)
+    cm = _channel_mix(p, xc, cm_shift, dist)
+    x = x + cm
+    return x, flatten_rwkv_state(S, xn[:, -1:], xc[:, -1:], rd)
+
+
+def _rwkv_out(p, y, g, dist, b, t, norm_eps):
+    hl, hs = y.shape[2], y.shape[3]
+    y = y.reshape(b, t, hl * hs).astype(jnp.bfloat16)
+    y = rms_norm(y, p["ln_x"], norm_eps)
+    y = y * jax.nn.silu(g.reshape(b, t, -1).astype(jnp.float32)).astype(y.dtype)
+    return psum_tp(dense(y, p["w_o"]), dist)
+
+
+def _channel_mix(p, xc, xc_prev, dist: Dist):
+    """Output-column-sharded channel mix; all-gather to replicate."""
+    xk = _rwkv_mix(xc, xc_prev, p["cm_mu_k"])
+    xr = _rwkv_mix(xc, xc_prev, p["cm_mu_r"])
+    k = dense(xk, p["cm_wk"])                                  # (B,T,ff_local)
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(xc.dtype)
+    vloc = dense(k, p["cm_wv"])                                # (B,T,d_local)
+    rloc = jax.nn.sigmoid(dense(xr, p["cm_wr"]).astype(jnp.float32))
+    out_loc = (vloc.astype(jnp.float32) * rloc).astype(xc.dtype)
+    return jax.lax.all_gather(out_loc, dist.tp_axis, axis=-1, tiled=True)
+
+
+def flatten_rwkv_state(S, att_shift, cm_shift, rd):
+    b = S.shape[0]
+    return jnp.concatenate([
+        S.astype(jnp.float32).reshape(b, -1),
+        att_shift.astype(jnp.float32).reshape(b, -1),
+        cm_shift.astype(jnp.float32).reshape(b, -1),
+    ], axis=-1)
+
+
+def split_rwkv_state(flat, rd, head_size, d):
+    b = flat.shape[0]
+    hl = rd["h_local"]
+    n = rd["wkv_units"]
+    S = flat[:, :n].reshape(b, hl, head_size, head_size).astype(jnp.float32)
+    att = flat[:, n:n + d].reshape(b, 1, d).astype(jnp.bfloat16)
+    cm = flat[:, n + d:n + 2 * d].reshape(b, 1, d).astype(jnp.bfloat16)
+    return S, att, cm

@@ -1,0 +1,126 @@
+"""Shared raw-JAX building blocks (no flax): init, norms, linear, sharding."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+DTYPE = jnp.bfloat16
+PARAM_DTYPE = jnp.float32   # master params fp32; compute casts to bf16
+
+
+# ----------------------------------------------------------------- initializers
+def normal_init(key, shape, scale=0.02, dtype=PARAM_DTYPE):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def zeros_init(key, shape, dtype=PARAM_DTYPE):
+    del key
+    return jnp.zeros(shape, dtype=dtype)
+
+
+def ones_init(key, shape, dtype=PARAM_DTYPE):
+    del key
+    return jnp.ones(shape, dtype=dtype)
+
+
+# ------------------------------------------------------------------------ norms
+def rms_norm(x, weight, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ----------------------------------------------------------------------- linear
+def dense(x, w, b=None):
+    """x: (..., in), w: (in, out) — compute in bf16, accumulate fp32."""
+    y = jnp.einsum("...i,io->...o", x, w.astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = dense(x, w_gate)
+    u = dense(x, w_up)
+    return dense(jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u, w_down)
+
+
+def gelu_mlp(x, w_up, b_up, w_down, b_down):
+    h = dense(x, w_up, b_up)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return dense(h, w_down, b_down)
+
+
+# ------------------------------------------------------------------- GQA layout
+def gqa_tp_layout(num_heads: int, num_kv_heads: int, tp: int
+                  ) -> Tuple[int, int, int, int]:
+    """Head layout for tensor parallelism over ``tp`` shards.
+
+    Returns (q_pad, q_local, kv_tp, kv_local):
+      kv_tp    — how many ways the KV heads are really sharded (gcd);
+      kv_local — KV heads stored per device (replicated tp/kv_tp times);
+      q_pad    — padded q heads = num_kv_heads * group_pad, divisible by tp
+                 with GQA group alignment; q_local = q_pad // tp.
+    """
+    kv_tp = math.gcd(num_kv_heads, tp)
+    kv_local = num_kv_heads // kv_tp
+    repl = tp // kv_tp
+    group = num_heads // num_kv_heads
+    group_pad = -(-group // repl) * repl
+    q_pad = num_kv_heads * group_pad
+    q_local = q_pad // tp
+    assert q_pad % tp == 0
+    return q_pad, q_local, kv_tp, kv_local
+
+
+def pad_heads(w, num_heads: int, q_pad: int, axis: int):
+    """Zero-pad a per-head parameter from num_heads to q_pad heads, with GQA
+    group-aligned placement: head h of group g goes to slot
+    g*group_pad + (h - g*group)."""
+    if q_pad == num_heads:
+        return w
+    # callers pre-arrange weights into (.., num_kv_heads, group, ..) and pad
+    raise NotImplementedError  # handled at init time via padded group layout
+
+
+# --------------------------------------------------------------------- sharding
+def logical_sharding(mesh, *spec):
+    """NamedSharding helper. ``spec`` entries are axis names or None."""
+    from jax.sharding import NamedSharding
+    return NamedSharding(mesh, P(*spec))
+
+
+def tree_size(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def tree_bytes(params) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(params))
+
+
+def cross_entropy_loss(logits, targets, mask=None):
+    """logits (..., V) fp32; targets int; mean over mask."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

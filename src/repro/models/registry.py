@@ -1,0 +1,21 @@
+"""Model registry: config -> model instance."""
+from __future__ import annotations
+
+from ..configs.base import ModelConfig
+from .encdec import EncDecLM
+from .hybrid import HybridLM
+from .lm import DecoderLM
+from .rwkv_lm import RWKVLM
+from .tp import Dist
+
+
+def build_model(cfg: ModelConfig, dist: Dist):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return DecoderLM(cfg, dist)
+    if cfg.family == "hybrid":
+        return HybridLM(cfg, dist)
+    if cfg.family == "ssm":
+        return RWKVLM(cfg, dist)
+    if cfg.family == "encdec":
+        return EncDecLM(cfg, dist)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,80 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float = 1e6):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    half = x.shape[-1] // 2
+    inv = rope_freqs(x.shape[-1], theta)                     # (half,)
+    ang = positions[..., None].astype(jnp.float32) * inv     # (..., seq, half)
+    cos = jnp.cos(ang)[..., None, :]                         # (..., seq, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def mrope_positions(positions, mrope_sections=(16, 24, 24)):
+    """Qwen2-VL multimodal RoPE: 3 position streams (temporal, h, w).
+
+    For the text-only / precomputed-embedding backbone the three streams
+    coincide for text tokens; vision tokens would carry distinct (t,h,w).
+    The stub frontend supplies a (3, seq) position array; for plain text we
+    broadcast 1D positions to all three streams.
+    """
+    if positions.ndim == 2:  # (batch, seq) text-only
+        return jnp.stack([positions] * 3, axis=0)
+    return positions  # already (3, batch, seq)
+
+
+def default_mrope_sections(head_dim: int):
+    """Qwen2-VL proportions (16,24,24 for hd=128): 1/4 temporal, rest h/w."""
+    half = head_dim // 2
+    t = max(1, half // 4)
+    h1 = (half - t) // 2
+    return (t, h1, half - t - h1)
+
+
+def apply_mrope(x, positions3, theta: float = 1e6, sections=None):
+    """M-RoPE: the head_dim/2 frequency slots are split into ``sections``
+    groups, each rotated by a different position stream.
+
+    x: (batch, seq, heads, head_dim); positions3: (3, batch, seq).
+    ``sections`` sums to head_dim//2 (Qwen2-VL: 16+24+24=64 for hd=128).
+    """
+    half = x.shape[-1] // 2
+    if sections is None:
+        sections = default_mrope_sections(x.shape[-1])
+    assert sum(sections) == half, (sections, half)
+    inv = rope_freqs(x.shape[-1], theta)                     # (half,)
+    # per-frequency-slot stream selector
+    sel = jnp.concatenate([
+        jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)
+    ])                                                        # (half,)
+    pos = positions3.astype(jnp.float32)                      # (3, B, S)
+    # gather per-slot positions: (B, S, half)
+    pos_slots = jnp.moveaxis(pos, 0, -1)[..., sel]            # (B, S, half)
+    ang = pos_slots * inv                                    # (B, S, half)
+    cos = jnp.cos(ang)[..., None, :]                         # (B, S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int):
+    """Whisper-style fixed sinusoidal embeddings."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d_model // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * dim / d_model)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

@@ -1,0 +1,5 @@
+from .engine import Engine, EngineConfig, StepMetrics, stub_modality_embed
+from ..core.request import MMItem
+from .request import Request, SamplingParams, Status
+from .scheduler import Scheduler, SchedulerConfig
+from .runner import ModelRunner

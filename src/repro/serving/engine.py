@@ -1,0 +1,194 @@
+"""Inference engine: scheduler + Jenga manager + model runner.
+
+Each ``step()``: schedule -> (state restores) -> one prefill chunk ->
+decode batch -> sample -> advance/checkpoint/retire -> finish.
+Collects the per-step metrics the paper's figures are built from
+(decode batch size Fig.15, memory breakdown Fig.16, hit rates Fig.17,
+encoder runs Fig.18)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.manager import JengaKVCacheManager
+from ..core.spec import KVCacheSpec
+from .request import Request, SamplingParams, Status
+from .runner import ModelRunner
+from .scheduler import Scheduler, SchedulerConfig
+
+
+def stub_modality_embed(mm_hash: int, offset: int, dim: int) -> np.ndarray:
+    """Deterministic stand-in for the vision/audio frontend (assignment:
+    frontends are stubs; embeddings are 'precomputed')."""
+    rng = np.random.default_rng((mm_hash & 0xFFFFFFFF, offset))
+    return (0.05 * rng.standard_normal(dim)).astype(np.float32)
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    kv_pool_bytes: int = 64 << 20
+    max_running: int = 16
+    chunk_size: int = 64
+    enable_prefix_caching: bool = True
+    memory_mode: str = "jenga"       # "jenga" | "paged-baseline"
+    geometry_mode: str = "lcm"        # "lcm" | "max"
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class StepMetrics:
+    step: int
+    decode_batch: int
+    prefill_tokens: int
+    used_units: int
+    evictable_units: int
+    empty_units: int
+    free_units: int
+    waste_units: int = 0
+
+
+class Engine:
+    def __init__(self, model, cfg: EngineConfig,
+                 params=None, seed: int = 0):
+        self.model = model
+        self.cfg = cfg
+        baseline = cfg.memory_mode == "paged-baseline"
+        self.mgr = JengaKVCacheManager(
+            model.kv_specs(),
+            total_memory_bytes=cfg.kv_pool_bytes,
+            mode=cfg.geometry_mode,
+            enable_prefix_caching=cfg.enable_prefix_caching,
+            enable_inflight_retirement=not baseline,
+            seed=cfg.seed,
+        )
+        if baseline:
+            self._apply_baseline_semantics()
+        self.scheduler = Scheduler(
+            self.mgr, SchedulerConfig(max_running=cfg.max_running,
+                                      chunk_size=cfg.chunk_size))
+        self.runner = ModelRunner(model, self.mgr,
+                                  stub_embed_fn=stub_modality_embed)
+        self.params = params if params is not None else model.init(seed)
+        self.step_count = 0
+        self.metrics: List[StepMetrics] = []
+        self.encoder_runs = 0
+        self.mm_seen: set = set()
+        self.finished: List[Request] = []
+
+    # ------------------------------------------------- baseline semantics
+    def _apply_baseline_semantics(self):
+        """PagedAttention-style baseline (paper §3.2): all layer types are
+        treated as full-prefix self-attention — mm/cross caches allocate
+        pages for EVERY token, sliding windows never retire, eviction is a
+        single uncustomized LRU."""
+        from ..core.policies import FullAttentionPolicy
+        mgr = self.mgr
+        for name, spec in ((s.name, s) for s in mgr.specs):
+            if spec.kind in ("swa", "vision_embed", "cross_attn"):
+                pol = FullAttentionPolicy(spec)
+                mgr.policies[name] = pol
+        orig = mgr._mm_storage_upto
+
+        def all_tokens(req, spec, main_pos):
+            if spec.kind in ("vision_embed", "cross_attn") and not \
+                    req.encoder_items:
+                return main_pos            # every token, image or not
+            return orig(req, spec, main_pos)
+
+        mgr._mm_storage_upto = all_tokens
+
+    # -------------------------------------------------------------- submit
+    def submit(self, req: Request) -> None:
+        req.arrival = self.step_count
+        self.scheduler.add(req)
+
+    # ---------------------------------------------------------------- step
+    def step(self) -> Optional[StepMetrics]:
+        if not self.scheduler.has_work():
+            return None
+        plan = self.scheduler.schedule()
+        for op in plan.copy_ops:
+            self.runner.copy_page(op.type_name, op.src_page, op.dst_page)
+
+        # ---- one prefill chunk
+        if plan.prefill is not None:
+            req = plan.prefill
+            seq = req.seq
+            if (self.model.cfg.family in ("vlm", "encdec")
+                    and seq.num_computed == 0):
+                items = seq.mm_items or seq.encoder_items
+                for it in items:
+                    if it.mm_hash not in self.mm_seen or not \
+                            self.cfg.enable_prefix_caching:
+                        self.encoder_runs += 1
+                        self.mm_seen.add(it.mm_hash)
+            logits = self.runner.run(self.params, [req], prefill=True,
+                                     chunk=plan.prefill_tokens)
+            n = plan.prefill_tokens
+            ops = self.mgr.advance(seq, n)
+            for op in ops:
+                self.runner.copy_page(op.type_name, op.src_page, op.dst_page)
+            self.mgr.consume_mm(seq, seq.num_computed)
+            self.mgr.touch(seq)
+            if not req.in_prefill:      # prompt complete -> first token
+                tok = self._sample(req, logits[0])
+                req.output.append(tok)
+                seq.append_token(tok)
+                req.first_token_step = self.step_count
+                self._maybe_finish(req)
+
+        # ---- decode batch
+        if plan.decodes:
+            logits = self.runner.run(self.params, plan.decodes, prefill=False)
+            for i, req in enumerate(plan.decodes):
+                seq = req.seq
+                ops = self.mgr.advance(seq, 1)
+                for op in ops:
+                    self.runner.copy_page(op.type_name, op.src_page,
+                                          op.dst_page)
+                self.mgr.touch(seq)
+                tok = self._sample(req, logits[i])
+                req.output.append(tok)
+                seq.append_token(tok)
+                self._maybe_finish(req)
+
+        stats = self.mgr.memory_stats()
+        m = StepMetrics(
+            step=self.step_count,
+            decode_batch=len(plan.decodes),
+            prefill_tokens=plan.prefill_tokens,
+            used_units=stats.used_units,
+            evictable_units=stats.evictable_units,
+            empty_units=stats.empty_units,
+            free_units=stats.free_units,
+        )
+        self.metrics.append(m)
+        self.step_count += 1
+        return m
+
+    def _sample(self, req: Request, logits: np.ndarray) -> int:
+        v = self.model.cfg.vocab_size
+        logits = logits[:v]
+        if req.sampling.temperature <= 0:
+            return int(np.argmax(logits))
+        rng = np.random.default_rng(
+            (req.sampling.seed, len(req.output), hash(req.rid) & 0xFFFF))
+        p = logits / req.sampling.temperature
+        p = np.exp(p - p.max())
+        p /= p.sum()
+        return int(rng.choice(v, p=p))
+
+    def _maybe_finish(self, req: Request) -> None:
+        if req.is_done():
+            req.finished_step = self.step_count
+            self.scheduler.finish(req, cache=True)
+            self.finished.append(req)
+
+    # ----------------------------------------------------------------- run
+    def run_until_done(self, max_steps: int = 10_000) -> List[Request]:
+        while self.scheduler.has_work() and self.step_count < max_steps:
+            self.step()
+        return self.finished

@@ -1,0 +1,59 @@
+"""Serving-level request objects."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional, Tuple
+
+from ..core.request import MMItem, SequenceState
+
+
+class Status(enum.Enum):
+    WAITING = 0
+    RUNNING = 1
+    FINISHED = 2
+
+
+@dataclasses.dataclass
+class SamplingParams:
+    max_new_tokens: int = 16
+    temperature: float = 0.0        # 0 = greedy
+    eos_token: Optional[int] = None
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    rid: str
+    prompt: List[int]
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    mm_items: Tuple[MMItem, ...] = ()
+    encoder_items: Tuple[MMItem, ...] = ()
+    status: Status = Status.WAITING
+    arrival: float = 0.0
+    seq: Optional[SequenceState] = None
+    output: List[int] = dataclasses.field(default_factory=list)
+    preemptions: int = 0
+    first_token_step: Optional[int] = None
+    finished_step: Optional[int] = None
+
+    def make_seq(self) -> SequenceState:
+        self.seq = SequenceState(
+            rid=self.rid, tokens=list(self.prompt),
+            mm_items=self.mm_items, encoder_items=self.encoder_items)
+        return self.seq
+
+    @property
+    def in_prefill(self) -> bool:
+        return (self.seq is not None
+                and self.seq.num_computed < len(self.prompt))
+
+    @property
+    def num_generated(self) -> int:
+        return len(self.output)
+
+    def is_done(self) -> bool:
+        if self.num_generated >= self.sampling.max_new_tokens:
+            return True
+        eos = self.sampling.eos_token
+        return eos is not None and self.output and self.output[-1] == eos

@@ -1,0 +1,207 @@
+"""ModelRunner: builds padded device batches from Jenga manager state and
+runs bucketed jitted serve steps (no retrace across allocator changes —
+exec page ids are plain i32 data, the paper's §4.2 property)."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.manager import JengaKVCacheManager
+from ..core.request import SequenceState
+from ..core.spec import lcm as _lcm
+from ..models.lm import DecodeBatch
+from .request import Request
+
+SENTINEL_POS = np.int32(1 << 29)
+
+
+def _pow2(n: int, lo: int = 1) -> int:
+    p = lo
+    while p < n:
+        p *= 2
+    return p
+
+
+class ModelRunner:
+    def __init__(self, model, manager: JengaKVCacheManager,
+                 stub_embed_fn=None):
+        self.model = model
+        self.mgr = manager
+        self.specs = {s.name: s for s in model.kv_specs()}
+        self.stub_embed_fn = stub_embed_fn
+        big = _lcm([s.page_units for s in self.specs.values()])
+        units = manager.geometry.total_units + big   # + scratch page
+        self.buffer = jnp.zeros((1, 1, units), jnp.bfloat16)
+        self._steps: Dict = {}
+        self._copy_fn = None
+
+    # ----------------------------------------------------------- batching
+    def _attn_table(self, seq: SequenceState, name: str, p_max: int):
+        spec = self.specs[name]
+        tpp = spec.tokens_per_page
+        table = np.full((p_max,), -1, np.int32)
+        pos = np.full((p_max,), SENTINEL_POS, np.int32)
+        entries = seq.page_tables.get(name, [])
+        for i, e in enumerate(entries[:p_max]):
+            if e != SequenceState.FREED:
+                table[i] = e
+                pos[i] = i * tpp
+        return table, pos
+
+    def _mm_table(self, seq: SequenceState, name: str, p_max: int):
+        table = np.full((p_max,), -1, np.int32)
+        pos = np.full((p_max,), SENTINEL_POS, np.int32)
+        spec = self.specs[name]
+        entries = seq.page_tables.get(name, [])
+        for i, e in enumerate(entries[:p_max]):
+            if e != SequenceState.FREED:
+                table[i] = e
+                pos[i] = i * spec.tokens_per_page
+        return table, pos
+
+    def build_batch(self, reqs: List[Request], *, prefill: bool,
+                    chunk: int = 0) -> Tuple[DecodeBatch, dict]:
+        """Pad to bucketed shapes; returns (batch, bucket_info)."""
+        mgr, specs = self.mgr, self.specs
+        n = len(reqs)
+        B = _pow2(n)
+        T = _pow2(chunk) if prefill else 1
+        p_need: Dict[str, int] = {}
+        for name, s in specs.items():
+            if s.kind in ("mamba", "rwkv"):
+                continue
+            longest = 1
+            for r in reqs:
+                longest = max(longest, len(r.seq.page_tables.get(name, [])))
+            p_need[name] = _pow2(longest, 4)
+        tokens = np.zeros((B, T), np.int32)
+        positions = np.zeros((B, T), np.int32)
+        seq_lens = np.ones((B,), np.int32)
+        last_idx = np.zeros((B,), np.int32)
+        tables = {k: np.full((1, 1, B, p), -1, np.int32)
+                  for k, p in p_need.items()}
+        page_pos = {k: np.full((1, 1, B, p), SENTINEL_POS, np.int32)
+                    for k, p in p_need.items()}
+        write_eids = {k: np.full((1, 1, B, T), -1, np.int32)
+                      for k in p_need}
+        state_eids = {s.name: np.full((1, B), -1, np.int32)
+                      for s in specs.values() if s.kind in ("mamba", "rwkv")}
+        mm_embeds = mm_mask = mrope = None
+        enc_embeds = enc_write = enc_lens = None
+        cfg = self.model.cfg
+        if cfg.family == "vlm" and prefill:
+            mm_embeds = np.zeros((B, T, cfg.d_model), np.float32)
+            mm_mask = np.zeros((B, T), bool)
+            mrope = np.zeros((3, B, T), np.int32)
+        if cfg.family == "encdec":
+            enc_lens = np.zeros((B,), np.int32)
+            if prefill:
+                enc_embeds = np.zeros((B, cfg.encoder_seq, cfg.d_model),
+                                      np.float32)
+                enc_write = np.full((1, 1, B, cfg.encoder_seq), -1, np.int32)
+
+        for bi, r in enumerate(reqs):
+            seq = r.seq
+            start = seq.num_computed
+            t_real = chunk if prefill else 1
+            toks = seq.tokens[start:start + t_real]
+            tokens[bi, :len(toks)] = toks
+            positions[bi, :t_real] = np.arange(start, start + t_real)
+            positions[bi, t_real:] = 0
+            seq_lens[bi] = start + t_real
+            last_idx[bi] = t_real - 1
+            for name in p_need:
+                spec = specs[name]
+                if spec.kind in ("full_attn", "swa"):
+                    tb, pp = self._attn_table(seq, name, p_need[name])
+                    tables[name][0, 0, bi] = tb
+                    page_pos[name][0, 0, bi] = pp
+                    tpp = spec.tokens_per_page
+                    for j in range(t_real):
+                        pg = (start + j) // tpp
+                        write_eids[name][0, 0, bi, j] = tb[pg]
+                else:  # mm kinds
+                    tb, pp = self._mm_table(seq, name, p_need[name])
+                    tables[name][0, 0, bi] = tb
+                    page_pos[name][0, 0, bi] = pp
+            for name in state_eids:
+                if name in seq.state_pages:
+                    state_eids[name][0, bi] = seq.state_pages[name]
+            if cfg.family == "vlm" and prefill and self.stub_embed_fn:
+                for it in seq.mm_items:
+                    for off in range(it.length):
+                        p = it.start + off
+                        if start <= p < start + t_real:
+                            mm_embeds[bi, p - start] = self.stub_embed_fn(
+                                it.mm_hash, off, cfg.d_model)
+                            mm_mask[bi, p - start] = True
+                mrope[:, bi] = positions[bi][None]
+            if cfg.family == "encdec":
+                total_enc = sum(it.length for it in seq.encoder_items)
+                enc_lens[bi] = total_enc
+                if prefill and start == 0 and self.stub_embed_fn:
+                    off0 = 0
+                    for it in seq.encoder_items:
+                        for off in range(it.length):
+                            enc_embeds[bi, off0 + off] = self.stub_embed_fn(
+                                it.mm_hash, off, cfg.d_model)
+                        off0 += it.length
+                    ctab = seq.page_tables.get("cross_attn", [])
+                    tpp = specs["cross_attn"].tokens_per_page
+                    for j in range(min(total_enc, cfg.encoder_seq)):
+                        pg = j // tpp
+                        if pg < len(ctab) and ctab[pg] >= 0:
+                            enc_write[0, 0, bi, j] = ctab[pg]
+
+        batch = DecodeBatch(
+            tokens=jnp.asarray(tokens), positions=jnp.asarray(positions),
+            seq_lens=jnp.asarray(seq_lens),
+            tables={k: jnp.asarray(v) for k, v in tables.items()},
+            page_pos={k: jnp.asarray(v) for k, v in page_pos.items()},
+            write_eids={k: jnp.asarray(v) for k, v in write_eids.items()},
+            state_eids={k: jnp.asarray(v) for k, v in state_eids.items()},
+            mm_embeds=None if mm_embeds is None else jnp.asarray(mm_embeds),
+            mm_mask=None if mm_mask is None else jnp.asarray(mm_mask),
+            mrope_pos=None if mrope is None else jnp.asarray(mrope),
+            last_idx=jnp.asarray(last_idx) if prefill else None,
+            enc_embeds=None if enc_embeds is None else jnp.asarray(enc_embeds),
+            enc_write_eids=None if enc_write is None else jnp.asarray(enc_write),
+            enc_lens=None if enc_lens is None else jnp.asarray(enc_lens),
+        )
+        key = (prefill, B, T, tuple(sorted(p_need.items())),
+               mm_embeds is not None, enc_embeds is not None)
+        return batch, {"key": key, "n": n}
+
+    # ----------------------------------------------------------------- run
+    def run(self, params, reqs: List[Request], *, prefill: bool,
+            chunk: int = 0) -> np.ndarray:
+        batch, info = self.build_batch(reqs, prefill=prefill, chunk=chunk)
+        key = info["key"]
+        fn = self._steps.get(key)
+        if fn is None:
+            fn = jax.jit(partial(self.model.serve_step, prefill=prefill),
+                         donate_argnums=(1,))
+            self._steps[key] = fn
+        logits, self.buffer = fn(params, self.buffer, batch)
+        return np.asarray(logits[:info["n"]], np.float32)
+
+    # ------------------------------------------------------------- copies
+    def copy_page(self, type_name: str, src: int, dst: int) -> None:
+        """Device copy of one whole small page (state checkpoint/restore)."""
+        spec = self.specs[type_name]
+        size = spec.page_units
+        if self._copy_fn is None:
+            def cp(buf, off_src, off_dst, size_s):
+                flat = buf.reshape(-1)
+                blk = jax.lax.dynamic_slice(flat, (off_src,), (size_s,))
+                flat = jax.lax.dynamic_update_slice(flat, blk, (off_dst,))
+                return flat.reshape(buf.shape)
+            self._copy_fn = jax.jit(cp, static_argnums=(3,),
+                                    donate_argnums=(0,))
+        self.buffer = self._copy_fn(
+            self.buffer, jnp.int32(src * size), jnp.int32(dst * size), size)

@@ -1,0 +1,120 @@
+"""Continuous-batching scheduler with chunked prefill and recompute
+preemption, integrated with the Jenga manager (begin/allocate/preempt)."""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional, Tuple
+
+from ..core.manager import JengaKVCacheManager, StateCopyOp
+from .request import Request, Status
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    max_running: int = 16
+    chunk_size: int = 64            # chunked-prefill token budget per step
+    max_preemptions: int = 100
+
+
+@dataclasses.dataclass
+class StepPlan:
+    prefill: Optional[Request]          # one prefill chunk this step
+    prefill_tokens: int
+    decodes: List[Request]              # requests decoding one token each
+    copy_ops: List[StepCopy] = dataclasses.field(default_factory=list)
+
+
+StepCopy = StateCopyOp
+
+
+class Scheduler:
+    def __init__(self, manager: JengaKVCacheManager, cfg: SchedulerConfig):
+        self.mgr = manager
+        self.cfg = cfg
+        self.waiting: Deque[Request] = deque()
+        self.running: List[Request] = []
+        self.preemption_count = 0
+
+    def add(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    # ------------------------------------------------------------ schedule
+    def schedule(self) -> StepPlan:
+        copy_ops: List[StateCopyOp] = []
+        # 1) admit new requests while capacity allows
+        while (self.waiting and len(self.running) < self.cfg.max_running):
+            req = self.waiting[0]
+            if req.seq is None or req.seq.num_computed == 0:
+                seq = req.make_seq() if req.seq is None else req.seq
+                ok, ops = self.mgr.begin_request(seq)
+                if not ok:
+                    break
+                copy_ops.extend(ops)
+            self.waiting.popleft()
+            req.status = Status.RUNNING
+            self.running.append(req)
+
+        # 2) pick one prefill chunk (FIFO among running prefills)
+        plan_prefill = None
+        prefill_tokens = 0
+        for req in self.running:
+            if req.in_prefill:
+                seq = req.seq
+                target = min(len(req.prompt),
+                             seq.num_computed + self.cfg.chunk_size)
+                while not self.mgr.allocate_for_tokens(seq, target):
+                    victim = self._pick_victim(exclude=req)
+                    if victim is None:
+                        target = 0
+                        break
+                    self._preempt(victim)
+                if target > seq.num_computed:
+                    plan_prefill = req
+                    prefill_tokens = target - seq.num_computed
+                break
+
+        # 3) all decode-phase requests step one token
+        decodes = []
+        for req in list(self.running):
+            if req.in_prefill or req is plan_prefill:
+                continue
+            seq = req.seq
+            while not self.mgr.allocate_for_tokens(seq, seq.num_tokens):
+                victim = self._pick_victim(exclude=req)
+                if victim is None or victim is req:
+                    victim = req          # self-preempt as last resort
+                self._preempt(victim)
+                if victim is req:
+                    seq = None
+                    break
+            if seq is not None:
+                decodes.append(req)
+        return StepPlan(prefill=plan_prefill, prefill_tokens=prefill_tokens,
+                        decodes=decodes, copy_ops=copy_ops)
+
+    # ------------------------------------------------------------ preempt
+    def _pick_victim(self, exclude: Request) -> Optional[Request]:
+        """Latest-arrival running request (vLLM recompute preemption)."""
+        cands = [r for r in self.running if r is not exclude]
+        if not cands:
+            return None
+        return max(cands, key=lambda r: r.arrival)
+
+    def _preempt(self, req: Request) -> None:
+        self.mgr.preempt_request(req.seq)
+        req.preemptions += 1
+        self.preemption_count += 1
+        req.status = Status.WAITING
+        self.running.remove(req)
+        self.waiting.appendleft(req)
+
+    # ------------------------------------------------------------- finish
+    def finish(self, req: Request, cache: bool = True) -> None:
+        self.mgr.free_request(req.seq, cache=cache)
+        req.status = Status.FINISHED
+        if req in self.running:
+            self.running.remove(req)

@@ -1,0 +1,157 @@
+"""Speculative decoding with a shared Jenga pool (paper §6.1, Fig. 19).
+
+Draft and target models register their KV types ("draft_*" / "tgt_*") in ONE
+JengaKVCacheManager: the LCM geometry automatically accommodates the two
+page sizes with negligible fragmentation — the paper's multi-model case.
+
+Greedy speculative decoding: the draft proposes k tokens; the target scores
+them in a single T=k+1 step; the longest agreeing prefix is accepted plus
+one bonus token; rejected tokens roll back (pages stay, content is
+overwritten later)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from ..core.manager import JengaKVCacheManager
+from ..core.request import SequenceState
+from .request import Request, SamplingParams
+from .runner import ModelRunner
+
+
+@dataclasses.dataclass
+class SpecDecodeConfig:
+    k: int = 3                      # proposals per round
+    kv_pool_bytes: int = 64 << 20
+    chunk_size: int = 32
+    geometry_mode: str = "lcm"      # "max" reproduces vLLM-max (Fig. 19)
+
+
+class SpecDecodeEngine:
+    """Single-sequence-at-a-time speculative decoding (functional case
+    study; the throughput comparison in benchmarks uses allocator replay)."""
+
+    def __init__(self, target_model, draft_model, cfg: SpecDecodeConfig,
+                 target_params=None, draft_params=None, seed=0):
+        assert target_model.cfg.family in ("dense", "moe")
+        assert draft_model.cfg.family == "dense"
+        target_model.kv_prefix = "tgt_"
+        draft_model.kv_prefix = "draft_"
+        self.tm, self.dm = target_model, draft_model
+        self.cfg = cfg
+        specs = tuple(target_model.kv_specs()) + tuple(draft_model.kv_specs())
+        self.mgr = JengaKVCacheManager(
+            specs, total_memory_bytes=cfg.kv_pool_bytes,
+            mode=cfg.geometry_mode,
+            enable_prefix_caching=False)   # rollback requires caching off
+        self.t_runner = ModelRunner(target_model, self.mgr)
+        self.d_runner = ModelRunner(draft_model, self.mgr)
+        self.d_runner.buffer = self.t_runner.buffer   # shared pool...
+        self._shared_buffer()
+        self.tp = target_params if target_params is not None \
+            else target_model.init(seed)
+        self.dp = draft_params if draft_params is not None \
+            else draft_model.init(seed + 1)
+        self.accept_lengths: List[int] = []
+
+    def _shared_buffer(self):
+        # both runners must see the same device buffer object; wrap run()
+        t, d = self.t_runner, self.d_runner
+
+        class _Shared:
+            buffer = t.buffer
+        self._buf = _Shared
+
+        def make_run(runner, params_attr):
+            orig = runner.run
+
+            def run(params, reqs, **kw):
+                runner.buffer = self._buf.buffer
+                out = orig(params, reqs, **kw)
+                self._buf.buffer = runner.buffer
+                return out
+            return run
+
+        t.run_shared = make_run(t, "tp")
+        d.run_shared = make_run(d, "dp")
+
+    # ------------------------------------------------------------ generate
+    def generate(self, prompt: List[int], max_new_tokens: int = 16,
+                 rid: str = "s0") -> List[int]:
+        k = self.cfg.k
+        # two SequenceStates share the same request id & token history
+        tseq = SequenceState(rid=rid + "_t", tokens=list(prompt))
+        dseq = SequenceState(rid=rid + "_d", tokens=list(prompt))
+        for seq in (tseq, dseq):
+            ok, _ = self.mgr.begin_request(seq)
+            assert ok
+        treq = Request(rid=rid + "_t", prompt=list(prompt)); treq.seq = tseq
+        dreq = Request(rid=rid + "_d", prompt=list(prompt)); dreq.seq = dseq
+
+        # prefill both (chunked); keep the TARGET's last logits
+        t_last = None
+        for seq, runner, params, req in ((tseq, self.t_runner, self.tp, treq),
+                                         (dseq, self.d_runner, self.dp, dreq)):
+            while seq.num_computed < len(prompt):
+                n = min(self.cfg.chunk_size,
+                        len(prompt) - seq.num_computed)
+                assert self.mgr.allocate_for_tokens(
+                    seq, seq.num_computed + n)
+                logits = runner.run_shared(params, [req], prefill=True,
+                                           chunk=n)
+                self.mgr.advance(seq, n)
+            if seq is tseq:
+                t_last = logits
+        first = int(np.argmax(t_last[0][: self.tm.cfg.vocab_size]))
+        out = [first]
+        tseq.append_token(first)
+        dseq.append_token(first)
+
+        while len(out) < max_new_tokens:
+            # ---- draft proposes k tokens
+            proposals = []
+            for _ in range(k):
+                assert self.mgr.allocate_for_tokens(dseq, dseq.num_tokens)
+                logits = self.d_runner.run_shared(self.dp, [dreq],
+                                                  prefill=False)
+                self.mgr.advance(dseq, 1)
+                tok = int(np.argmax(logits[0][: self.dm.cfg.vocab_size]))
+                proposals.append(tok)
+                dseq.append_token(tok)
+            # ---- target verifies k+1 positions in one step
+            base = tseq.num_computed          # first unverified position
+            tseq.tokens = dseq.tokens[: base + k + 1]
+            assert self.mgr.allocate_for_tokens(tseq, base + k + 1)
+            t_logits = self._target_multi(treq, base, k + 1)
+            greedy = np.argmax(
+                t_logits[:, : self.tm.cfg.vocab_size], axis=-1)
+            n_accept = 0
+            while n_accept < k and proposals[n_accept] == int(greedy[n_accept]):
+                n_accept += 1
+            bonus = int(greedy[n_accept])
+            accepted = proposals[:n_accept] + [bonus]
+            self.accept_lengths.append(n_accept)
+            out.extend(accepted)
+            new_tokens = dseq.tokens[: base + n_accept + 1] + [bonus]
+            self.mgr.advance(tseq, n_accept + 1)
+            self.mgr.rollback(tseq, base + n_accept + 1, new_tokens)
+            self.mgr.rollback(dseq, base + n_accept, new_tokens)
+        self.mgr.free_request(tseq, cache=False)
+        self.mgr.free_request(dseq, cache=False)
+        return out[:max_new_tokens]
+
+    def _target_multi(self, treq: Request, base: int, t: int) -> np.ndarray:
+        """Target logits for positions [base, base+t): t bucketed decode
+        calls (each reads the KV written by the previous — the strict
+        `slot_pos < position` old-page mask makes this exact)."""
+        seq = treq.seq
+        logits_all = np.zeros((t, self.t_runner.model.v_pad), np.float32)
+        saved = seq.num_computed
+        for j in range(t):
+            lg = self.t_runner.run_shared(self.tp, [treq], prefill=False)
+            logits_all[j] = lg[0]
+            seq.num_computed += 1
+        seq.num_computed = saved
+        return logits_all

@@ -1,0 +1,4 @@
+from .checkpoint import Checkpointer
+from .data import Prefetcher, SyntheticLM
+from .optimizer import AdamWConfig, OptState, compressed_psum, init, update
+from .trainer import Trainer, TrainerConfig

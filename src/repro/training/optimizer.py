@@ -1,0 +1,130 @@
+"""AdamW in raw JAX, with optional ZeRO-1 optimizer-state sharding over the
+data axis and a bf16 error-feedback compressed-psum utility for DP gradient
+sync (distributed-optimization tricks; DESIGN.md §5)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: Any
+    mu: Any
+    nu: Any
+
+
+def schedule(cfg: AdamWConfig, step):
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, step / jnp.maximum(1, cfg.warmup_steps))
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(1, cfg.total_steps - cfg.warmup_steps), 0, 1)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def init(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                    nu=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(cfg: AdamWConfig, params, grads, state: OptState
+           ) -> Tuple[Any, OptState, dict]:
+    """One AdamW step. Everything elementwise -> sharding-preserving."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(step, new_mu, new_nu), metrics
+
+
+# ------------------------------------------------------------------- ZeRO-1
+def zero1_spec(param_spec: P, shape: Tuple[int, ...], data_size: int,
+               axis: str = "data") -> P:
+    """Shard optimizer state over the data axis on the first dim that is
+    free (unsharded) and divisible — the ZeRO-1 memory win. Falls back to
+    the param's own spec (e.g. FSDP/EP params already use the data axis)."""
+    flat = []
+    for e in param_spec:
+        flat.extend(e if isinstance(e, tuple) else (e,))
+    if axis in flat:
+        return param_spec
+    entries = list(param_spec) + [None] * (len(shape) - len(param_spec))
+    for i, (e, n) in enumerate(zip(entries, shape)):
+        if e is None and n % data_size == 0 and n > 0:
+            entries[i] = axis
+            return P(*entries)
+    return param_spec
+
+
+def zero1_shardings(param_specs, param_shapes, mesh, axis: str = "data"):
+    data_size = mesh.shape[axis]
+    # multi-pod: additionally shard optimizer state over the pod axis
+    # (ZeRO over DCN — states are only touched once per step)
+    pod = "pod" in mesh.axis_names
+
+    def one(spec, shp):
+        out = zero1_spec(spec, shp.shape, data_size, axis)
+        if pod:
+            out = zero1_spec(out, shp.shape, mesh.shape["pod"], "pod")
+        return NamedSharding(mesh, out)
+
+    return jax.tree.map(one, param_specs, param_shapes)
+
+
+# ------------------------------------------- compressed DP gradient all-reduce
+def compressed_psum(x, axis_name: str, error: Optional[jax.Array] = None):
+    """bf16 all-reduce with error feedback: quantize (x + e) to bf16, psum,
+    and return (sum, new_error). Halves DP gradient-sync bytes; the error
+    carry keeps the long-run bias at zero."""
+    xf = x.astype(jnp.float32)
+    if error is not None:
+        xf = xf + error
+    q = xf.astype(jnp.bfloat16)
+    new_error = xf - q.astype(jnp.float32)
+    total = jax.lax.psum(q, axis_name).astype(jnp.float32)
+    return total, new_error

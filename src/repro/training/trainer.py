@@ -1,0 +1,181 @@
+"""Fault-tolerant training driver.
+
+Features (DESIGN.md §5):
+  * jitted train step: shard_map loss -> grads -> AdamW (optionally ZeRO-1
+    sharded states) with microbatch gradient accumulation;
+  * deterministic data keyed by step -> bit-exact resume;
+  * NaN/Inf watchdog: restore last checkpoint and skip the bad step;
+  * async checkpointing every N steps + elastic restore onto any mesh;
+  * straggler monitor: per-step wall-time EMA, slow-step counter and hook.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from . import optimizer as opt
+from .checkpoint import Checkpointer
+from .data import SyntheticLM
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    micro_batches: int = 1
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep_ckpts: int = 3
+    zero1: bool = True
+    straggler_factor: float = 3.0
+    max_restores: int = 3
+
+
+class Trainer:
+    def __init__(self, model, adamw: opt.AdamWConfig,
+                 tcfg: TrainerConfig, extra_batch: Optional[Callable] = None):
+        self.model = model
+        self.dist = model.dist
+        self.adamw = adamw
+        self.tcfg = tcfg
+        self.extra_batch = extra_batch or (lambda tokens: {})
+        self.ckpt = Checkpointer(tcfg.ckpt_dir, keep=tcfg.keep_ckpts)
+        self._build()
+        # straggler stats
+        self.step_ema: Optional[float] = None
+        self.slow_steps = 0
+        self.restores = 0
+
+    # ------------------------------------------------------------------ build
+    def _build(self):
+        model, mesh = self.model, self.dist.mesh
+        specs = model.specs()
+        self.param_shardings = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), specs)
+        struct = model.struct()
+        if self.tcfg.zero1:
+            state_shardings = opt.zero1_shardings(specs, struct, mesh)
+        else:
+            state_shardings = self.param_shardings
+        self.opt_shardings = opt.OptState(
+            step=NamedSharding(mesh, P()),
+            mu=state_shardings, nu=jax.tree.map(lambda x: x, state_shardings))
+        acfg = self.adamw
+        n_micro = self.tcfg.micro_batches
+
+        def loss_fn(params, tokens, targets, extras):
+            return model.train_loss(params, tokens, targets, **extras)
+
+        def step_fn(params, state, tokens, targets, extras):
+            b = tokens.shape[0]
+            mb = b // n_micro
+
+            def micro(carry, xs):
+                gsum, lsum = carry
+                tok, tgt, ex = xs
+                loss, grads = jax.value_and_grad(loss_fn)(
+                    params, tok, tgt, ex)
+                gsum = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+                return (gsum, lsum + loss), None
+
+            gz = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            split = lambda a: a.reshape(n_micro, mb, *a.shape[1:])
+            ex_split = jax.tree.map(split, extras)
+            (gsum, lsum), _ = jax.lax.scan(
+                micro, (gz, jnp.float32(0)),
+                (split(tokens), split(targets), ex_split))
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            loss = lsum / n_micro
+            params2, state2, metrics = opt.update(acfg, params, grads, state)
+            metrics["loss"] = loss
+            return params2, state2, metrics
+
+        self._step = jax.jit(
+            step_fn,
+            in_shardings=(self.param_shardings, self.opt_shardings,
+                          None, None, None),
+            out_shardings=(self.param_shardings, self.opt_shardings, None),
+            donate_argnums=(0, 1),
+        )
+
+    # ------------------------------------------------------------------- init
+    def init_state(self, seed: int = 0):
+        params = self.model.init(seed)
+        params = jax.tree.map(
+            lambda a, s: jax.device_put(a, s), params, self.param_shardings)
+        state = opt.init(params)
+        state = jax.tree.map(
+            lambda a, s: jax.device_put(a, s), state, self.opt_shardings)
+        return params, state
+
+    # -------------------------------------------------------------------- run
+    def run(self, params, state, dataset: SyntheticLM, num_steps: int,
+            start_step: int = 0, log_every: int = 10,
+            on_metrics: Optional[Callable[[int, Dict], None]] = None):
+        step = start_step
+        history = []
+        while step < num_steps:
+            tokens_np, targets_np = dataset.batch_at(step)
+            extras = self.extra_batch(tokens_np)
+            t0 = time.perf_counter()
+            params2, state2, metrics = self._step(
+                params, state, jnp.asarray(tokens_np),
+                jnp.asarray(targets_np), extras)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            # ---- NaN watchdog: restore + skip the poisoned step
+            if not np.isfinite(loss):
+                self.restores += 1
+                if self.restores > self.tcfg.max_restores:
+                    raise RuntimeError("too many NaN restores")
+                last = self.ckpt.latest_step()
+                if last is None:
+                    raise RuntimeError(f"NaN at step {step}, no checkpoint")
+                params, state, _ = self.restore(last)
+                step = last + 1  # skip the bad batch deterministically
+                continue
+            params, state = params2, state2
+            # ---- straggler monitor
+            if self.step_ema is None:
+                self.step_ema = dt
+            else:
+                if dt > self.tcfg.straggler_factor * self.step_ema:
+                    self.slow_steps += 1
+                self.step_ema = 0.9 * self.step_ema + 0.1 * dt
+            history.append(loss)
+            if on_metrics and step % log_every == 0:
+                on_metrics(step, {**{k: float(v) for k, v in metrics.items()},
+                                  "sec_per_step": dt,
+                                  "slow_steps": self.slow_steps})
+            step += 1
+            if step % self.tcfg.ckpt_every == 0:
+                self.save(step, params, state)
+        self.ckpt.wait()
+        return params, state, history
+
+    # ----------------------------------------------------------- checkpoints
+    def save(self, step: int, params, state, blocking: bool = False):
+        self.ckpt.save(step, {"params": params, "opt": state},
+                       extra={"model": self.model.cfg.name}, blocking=blocking)
+
+    def restore(self, step: int):
+        target = {"params": self.model.struct(),
+                  "opt": opt.OptState(
+                      step=jax.ShapeDtypeStruct((), jnp.int32),
+                      mu=self.model.struct(), nu=self.model.struct())}
+        shardings = {"params": self.param_shardings, "opt": self.opt_shardings}
+        # struct leaves are fp32 for mu/nu
+        target["opt"] = opt.OptState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            mu=jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                            self.model.struct()),
+            nu=jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                            self.model.struct()))
+        tree, meta = self.ckpt.restore(step, target, shardings)
+        return tree["params"], tree["opt"], meta

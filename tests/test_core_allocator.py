@@ -1,0 +1,240 @@
+"""Unit tests for the two-level LCM allocator (Jenga §4)."""
+import pytest
+
+from repro.core import (
+    BYTES_PER_UNIT,
+    JengaKVCacheManager,
+    PageState,
+    SequenceState,
+    attention_spec,
+    cross_attention_spec,
+    make_geometry,
+    mamba_spec,
+)
+
+
+def llama_vision_like_specs(tpp=1):
+    """Paper Fig. 6: 2 cross-attn layers (page 256u) + 3 self-attn (384u),
+    per-token-per-layer 128u, tokens_per_page=1 -> LCM 768."""
+    self_attn = attention_spec(
+        "full_attn", num_layers=3, kv_heads=1, head_dim=64, tokens_per_page=tpp
+    )
+    cross = cross_attention_spec(
+        "cross_attn", num_layers=2, kv_heads=1, head_dim=64, tokens_per_page=tpp
+    )
+    return [self_attn, cross]
+
+
+def test_lcm_geometry_matches_paper_fig6():
+    specs = llama_vision_like_specs()
+    assert specs[0].page_units == 384
+    assert specs[1].page_units == 256
+    geom = make_geometry(specs, total_memory_bytes=768 * 10 * BYTES_PER_UNIT)
+    assert geom.large_page_units == 768  # LCM(256, 384)
+    assert geom.num_large_pages == 10
+    assert geom.small_pages_per_large(specs[0]) == 2
+    assert geom.small_pages_per_large(specs[1]) == 3
+
+
+def test_max_geometry():
+    specs = llama_vision_like_specs()
+    geom = make_geometry(
+        specs, total_memory_bytes=384 * 10 * BYTES_PER_UNIT, mode="max"
+    )
+    assert geom.large_page_units == 384
+    # MAX mode: every small page occupies a whole large page (§4.4)
+    assert geom.small_pages_per_large(specs[1]) == 1
+
+
+def test_gcd_geometry_rejected_for_pools():
+    specs = llama_vision_like_specs()
+    geom = make_geometry(
+        specs, total_memory_bytes=128 * 100 * BYTES_PER_UNIT, mode="gcd"
+    )
+    assert geom.large_page_units == 128
+    with pytest.raises(ValueError):
+        geom.small_pages_per_large(specs[0])
+
+
+def mgr(n_large=8, tpp=1, **kw):
+    specs = llama_vision_like_specs(tpp)
+    return JengaKVCacheManager(
+        specs,
+        total_memory_bytes=768 * tpp * n_large * BYTES_PER_UNIT,
+        **kw,
+    )
+
+
+def new_req(rid, n_tokens, mm=()):
+    return SequenceState(rid=rid, tokens=list(range(100, 100 + n_tokens)),
+                         mm_items=tuple(mm))
+
+
+def test_basic_alloc_free_roundtrip():
+    m = mgr(enable_prefix_caching=False)
+    r = new_req("r0", 5)
+    ok, _ = m.begin_request(r)
+    assert ok
+    assert m.allocate_for_tokens(r, 5)
+    # 5 tokens, tpp=1 -> 5 full-attn pages; no mm items -> 0 cross pages
+    assert len(r.page_tables["full_attn"]) == 5
+    assert r.page_tables.get("cross_attn", []) == []
+    stats = m.memory_stats()
+    assert stats.per_type["full_attn"].used == 5
+    m.advance(r, 5)
+    m.free_request(r, cache=False)
+    stats = m.memory_stats()
+    assert stats.used_units == 0
+    assert stats.free_large == 8  # everything returned to the LCM pool
+    m.check_invariants()
+
+
+def test_request_aware_allocation_packs_per_request():
+    """§4.3: small pages within one large page go to the same request."""
+    m = mgr(n_large=4, enable_prefix_caching=False)
+    a = new_req("a", 2)
+    b = new_req("b", 2)
+    for r in (a, b):
+        ok, _ = m.begin_request(r)
+        assert ok
+    # interleave allocation
+    assert m.allocate_for_tokens(a, 1)
+    assert m.allocate_for_tokens(b, 1)
+    assert m.allocate_for_tokens(a, 2)
+    assert m.allocate_for_tokens(b, 2)
+    pool = m.pools["full_attn"]
+    pages_a = {pool.pages[e].large_id for e in a.page_tables["full_attn"]}
+    pages_b = {pool.pages[e].large_id for e in b.page_tables["full_attn"]}
+    # each request's 2 small pages share one large page; requests don't mix
+    assert len(pages_a) == 1 and len(pages_b) == 1
+    assert pages_a != pages_b
+    # freeing one request returns exactly one large page
+    free_before = m.large_alloc.num_free
+    m.advance(a, 2)
+    m.free_request(a, cache=False)
+    assert m.large_alloc.num_free == free_before + 1
+    m.check_invariants()
+
+
+def test_fallback_to_other_requests_pages_when_full():
+    """§5.4 step 4: use another request's associated page before failing."""
+    m = mgr(n_large=1, enable_prefix_caching=False)  # 2 full-attn pages total
+    a = new_req("a", 1)
+    b = new_req("b", 1)
+    for r in (a, b):
+        ok, _ = m.begin_request(r)
+        assert ok
+    assert m.allocate_for_tokens(a, 1)
+    # the only large page is associated with "a"; b must still succeed
+    assert m.allocate_for_tokens(b, 1)
+    pool = m.pools["full_attn"]
+    assert pool.counts()["used"] == 2
+    # pool exhausted now
+    c = new_req("c", 1)
+    ok, _ = m.begin_request(c)
+    assert ok
+    assert not m.allocate_for_tokens(c, 1)
+    m.check_invariants()
+
+
+def test_oom_returns_false_and_rolls_back():
+    m = mgr(n_large=2, enable_prefix_caching=False)  # 4 full pages
+    r = new_req("r", 10)
+    ok, _ = m.begin_request(r)
+    assert ok
+    assert not m.allocate_for_tokens(r, 10)  # needs 10 > 4
+    # transaction rolled back: nothing held
+    assert m.memory_stats().used_units == 0
+    assert len(r.page_tables["full_attn"]) == 0
+    m.check_invariants()
+
+
+def test_mm_pages_allocated_for_image_tokens_only():
+    from repro.core import MMItem
+    m = mgr(n_large=16, enable_prefix_caching=False)
+    # 4 text + 3 image + 2 text
+    r = SequenceState(
+        rid="v", tokens=list(range(9)), mm_items=(MMItem(4, 3, mm_hash=77),)
+    )
+    ok, _ = m.begin_request(r)
+    assert ok
+    assert m.allocate_for_tokens(r, 9)
+    assert len(r.page_tables["full_attn"]) == 9   # all positions get LLM KV
+    assert len(r.page_tables["cross_attn"]) == 3  # only image tokens
+    m.advance(r, 9)
+    m.free_request(r, cache=False)
+    assert m.memory_stats().used_units == 0
+    m.check_invariants()
+
+
+def test_lcm_eviction_reclaims_cached_large_pages():
+    """§5.4 step 3: a new type can steal LRU evictable large pages from the
+    other type's prefix cache."""
+    m = mgr(n_large=4, tpp=1)
+    # fill cache with full-attn pages of finished requests
+    for i in range(2):
+        r = new_req(f"r{i}", 4)
+        r.tokens = [1000 * i + t for t in range(4)]
+        ok, _ = m.begin_request(r)
+        assert ok
+        assert m.allocate_for_tokens(r, 4)
+        m.advance(r, 4)
+        m.free_request(r, cache=True)
+    stats = m.memory_stats()
+    assert stats.per_type["full_attn"].evictable == 8
+    assert stats.free_large == 0
+    # now a cross-attn-heavy request needs pages -> must evict large pages
+    # (4 tokens: 4 full pages = 2 large + 3 cross pages = 1 large <= 4 large)
+    from repro.core import MMItem
+    r = SequenceState(rid="x", tokens=list(range(4)),
+                      mm_items=(MMItem(0, 3, mm_hash=5),))
+    ok, _ = m.begin_request(r)
+    assert ok
+    assert m.allocate_for_tokens(r, 4)
+    assert len([p for p in r.page_tables["cross_attn"] if p >= 0]) == 3
+    m.check_invariants()
+
+
+def test_memory_stats_accounting():
+    m = mgr(n_large=8, enable_prefix_caching=False)
+    r = new_req("r", 3)
+    ok, _ = m.begin_request(r)
+    assert ok
+    assert m.allocate_for_tokens(r, 3)
+    s = m.memory_stats()
+    # 3 used small pages of 384u; 2 large pages owned (2 per large) -> 1 empty
+    assert s.used_units == 3 * 384
+    assert s.per_type["full_attn"].owned_large == 2
+    assert s.per_type["full_attn"].empty == 1
+    assert s.free_large == 6
+    assert 0 < s.utilization < 1
+
+
+def test_mamba_state_allocation_and_checkpoint():
+    specs = [
+        attention_spec("full_attn", num_layers=2, kv_heads=1, head_dim=64,
+                       tokens_per_page=4),
+        mamba_spec("mamba", num_layers=2, conv_units=64, ssm_units=64,
+                   checkpoint_interval=8),
+    ]
+    m = JengaKVCacheManager(
+        specs, total_memory_bytes=10_000_000, enable_prefix_caching=True
+    )
+    r = new_req("m", 20)
+    ok, ops = m.begin_request(r)
+    assert ok and ops == []
+    assert m.allocate_for_tokens(r, 20)
+    assert "mamba" in r.state_pages
+    ops = m.advance(r, 20)
+    # checkpoints at 8 and 16
+    kinds = [(o.kind, o.position) for o in ops if o.type_name == "mamba"]
+    assert kinds == [("checkpoint", 8), ("checkpoint", 16)]
+    m.free_request(r, cache=True)
+    m.check_invariants()
+    # a second identical request should hit at 16 and restore the snapshot
+    r2 = new_req("m2", 20)
+    ok, ops = m.begin_request(r2)
+    assert ok
+    assert r2.prefix_hit_tokens == 16
+    restores = [o for o in ops if o.kind == "restore"]
+    assert len(restores) == 1 and restores[0].position == 16

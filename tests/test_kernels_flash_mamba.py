@@ -1,0 +1,61 @@
+"""Flash + Mamba kernels vs oracles (interpret mode), shape/dtype sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_tpu
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.mamba_scan.kernel import mamba_chunk_scan
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bh,t,s,d,blk", [
+    (2, 128, 128, 64, 64),
+    (1, 256, 256, 128, 128),
+    (3, 64, 64, 32, 32),
+])
+def test_flash_matches_ref(bh, t, s, d, blk, dtype):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((bh, t, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((bh, s, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((bh, s, d)), dtype)
+    out_k = flash_attention_tpu(q, k, v, causal=True, blk_q=blk, blk_k=blk,
+                                interpret=True)
+    out_r = flash_attention_ref(q, k, v, causal=True)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_flash_sliding_window(window):
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((2, 128, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 128, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 128, 64)), jnp.float32)
+    out_k = flash_attention_tpu(q, k, v, causal=True, window=window,
+                                blk_q=64, blk_k=64, interpret=True)
+    out_r = flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("b,t,h,p,n,chunk", [
+    (1, 128, 2, 16, 16, 32),
+    (2, 64, 1, 32, 16, 16),
+    (1, 256, 4, 64, 64, 64),
+])
+def test_mamba_chunk_matches_sequential(b, t, h, p, n, chunk):
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(0.5 * rng.standard_normal((b, t, h, p)), jnp.float32)
+    bm = jnp.asarray(0.5 * rng.standard_normal((b, t, n)), jnp.float32)
+    cm = jnp.asarray(0.5 * rng.standard_normal((b, t, n)), jnp.float32)
+    dt = jnp.asarray(0.1 + 0.5 * rng.random((b, t, h)), jnp.float32)
+    a_log = jnp.asarray(rng.standard_normal(h) * 0.3, jnp.float32)
+    out_k = mamba_chunk_scan(x, bm, cm, dt, a_log, chunk=chunk,
+                             interpret=True)
+    out_r = mamba_scan_ref(x, bm, cm, dt, a_log)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=2e-4, rtol=2e-3)

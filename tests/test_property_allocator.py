@@ -1,0 +1,172 @@
+"""Property-based tests (hypothesis) for Jenga allocator invariants.
+
+Invariants checked after every operation of a random serving trace:
+  * every large page is owned by exactly one pool or free (no leaks/doubles);
+  * pool state machines are consistent (free lists <-> EMPTY, heaps lazy-valid);
+  * used+evictable+empty small pages exactly tile the owned large pages;
+  * a request's live pages are always USED with ref_count >= 1;
+  * freeing everything returns the pool to pristine state;
+  * total allocated units never exceed the physical budget.
+"""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import (
+    BYTES_PER_UNIT,
+    JengaKVCacheManager,
+    MMItem,
+    PageState,
+    SequenceState,
+    attention_spec,
+    mamba_spec,
+    vision_embed_spec,
+)
+
+
+def build_mgr(n_large, prefix_caching):
+    specs = [
+        attention_spec("full_attn", num_layers=3, kv_heads=1, head_dim=16,
+                       tokens_per_page=2),
+        attention_spec("swa", num_layers=1, kv_heads=1, head_dim=16,
+                       tokens_per_page=2, kind="swa", sliding_window=4),
+        mamba_spec("mamba", num_layers=2, conv_units=8, ssm_units=24,
+                   checkpoint_interval=4),
+        vision_embed_spec("vision", hidden_units=48, tokens_per_page=2),
+    ]
+    from repro.core import make_geometry
+    geom = make_geometry(specs, total_memory_bytes=10**9)
+    total = geom.large_page_units * n_large * BYTES_PER_UNIT
+    return JengaKVCacheManager(
+        specs, total_memory_bytes=total, enable_prefix_caching=prefix_caching
+    )
+
+
+def deep_check(m, live_reqs):
+    m.check_invariants()
+    stats = m.memory_stats()
+    assert stats.used_units + stats.evictable_units + stats.empty_units + \
+        stats.free_units == stats.total_units
+    for r in live_reqs.values():
+        for name, table in r.page_tables.items():
+            pool = m.pools[name]
+            for eid in table:
+                if eid == SequenceState.FREED:
+                    continue
+                page = pool.pages[eid]
+                assert page.state == PageState.USED, (name, eid, page)
+                assert page.ref_count >= 1
+        for name, eid in r.state_pages.items():
+            assert m.pools[name].pages[eid].state == PageState.USED
+
+
+ops_strategy = st.lists(
+    st.tuples(
+        st.sampled_from(["new", "decode", "finish", "finish_nocache", "touch"]),
+        st.integers(0, 5),       # which request slot
+        st.integers(1, 19),      # prompt len / decode steps
+        st.booleans(),           # with image?
+    ),
+    min_size=1,
+    max_size=60,
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=ops_strategy, n_large=st.integers(2, 12), caching=st.booleans())
+def test_random_trace_invariants(ops, n_large, caching):
+    m = build_mgr(n_large, caching)
+    live = {}
+    uid = 0
+    for op, slot, n, img in ops:
+        if op == "new" and slot not in live:
+            uid += 1
+            mm = (MMItem(0, min(4, n), mm_hash=uid * 7),) if img and n >= 4 else ()
+            r = SequenceState(rid=f"r{uid}", tokens=list(range(uid, uid + n)),
+                              mm_items=mm)
+            ok, _ = m.begin_request(r)
+            assert ok or True
+            if ok:
+                if m.allocate_for_tokens(r, len(r.tokens)):
+                    m.advance(r, len(r.tokens) - r.num_computed)
+                    live[slot] = r
+                else:
+                    m.free_request(r, cache=False)
+        elif op == "decode" and slot in live:
+            r = live[slot]
+            for i in range(min(n, 5)):
+                r.append_token(40000 + uid * 100 + i)
+                if not m.allocate_for_tokens(r, len(r.tokens)):
+                    m.preempt_request(r)
+                    del live[slot]
+                    break
+                m.advance(r, 1)
+        elif op == "finish" and slot in live:
+            m.free_request(live.pop(slot), cache=True)
+        elif op == "finish_nocache" and slot in live:
+            m.free_request(live.pop(slot), cache=False)
+        elif op == "touch" and slot in live:
+            m.touch(live[slot])
+        deep_check(m, live)
+    # drain
+    for r in live.values():
+        m.free_request(r, cache=False)
+    deep_check(m, {})
+    stats = m.memory_stats()
+    assert stats.used_units == 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    prompts=st.lists(
+        st.lists(st.integers(0, 30), min_size=2, max_size=40), min_size=1,
+        max_size=8,
+    )
+)
+def test_prefix_hits_are_true_prefixes(prompts):
+    """Any reported hit length must be consistent: re-running the same prompt
+    twice in a row hits a prefix of it, and never the whole prompt."""
+    m = build_mgr(64, True)
+    for i, toks in enumerate(prompts):
+        r = SequenceState(rid=f"a{i}", tokens=list(toks))
+        ok, _ = m.begin_request(r)
+        if not ok:
+            continue
+        if not m.allocate_for_tokens(r, len(toks)):
+            m.free_request(r, cache=False)
+            continue
+        m.advance(r, len(toks) - r.num_computed)
+        m.free_request(r, cache=True)
+        r2 = SequenceState(rid=f"b{i}", tokens=list(toks))
+        ok, _ = m.begin_request(r2)
+        assert ok
+        assert 0 <= r2.prefix_hit_tokens < len(toks)
+        # hits are page-aligned for the full-attn type (tpp=2)
+        assert r2.prefix_hit_tokens % 2 == 0
+        m.free_request(r2, cache=False)
+        m.check_invariants()
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10**6), n_large=st.integers(1, 6))
+def test_exhaustion_never_corrupts(seed, n_large):
+    """Driving the pool to OOM repeatedly must keep accounting exact."""
+    import random as _random
+    rng = _random.Random(seed)
+    m = build_mgr(n_large, True)
+    live = []
+    for i in range(30):
+        n = rng.randint(1, 12)
+        r = SequenceState(rid=f"r{i}", tokens=list(range(i * 50, i * 50 + n)))
+        ok, _ = m.begin_request(r)
+        if ok and m.allocate_for_tokens(r, n):
+            m.advance(r, n - r.num_computed)
+            live.append(r)
+        else:
+            if ok:
+                m.free_request(r, cache=False)
+            if live and rng.random() < 0.7:
+                m.free_request(live.pop(0), cache=rng.random() < 0.5)
+        m.check_invariants()
+    for r in live:
+        m.free_request(r, cache=False)
+    assert m.memory_stats().used_units == 0

@@ -1,0 +1,53 @@
+"""Speculative decoding (§6.1): shared Jenga pool, greedy equivalence."""
+import numpy as np
+
+from repro.configs import ARCHS, reduced
+from repro.models.registry import build_model
+from repro.models.tp import single_device_dist
+from repro.serving import Engine, EngineConfig, Request, SamplingParams
+from repro.serving.spec_decode import SpecDecodeConfig, SpecDecodeEngine
+
+
+def test_spec_decode_matches_greedy_target():
+    """Greedy speculative decoding must emit EXACTLY the target's greedy
+    output, regardless of draft quality."""
+    tcfg = reduced(ARCHS["granite-3-2b"])
+    dcfg = reduced(ARCHS["internlm2-1.8b"],
+                   num_layers=2, vocab_size=tcfg.vocab_size)
+    dist = single_device_dist()
+    target = build_model(tcfg, dist)
+    draft = build_model(dcfg, dist)
+    prompt = list(range(12))
+    # reference: plain engine greedy on the target
+    ref_model = build_model(tcfg, dist)
+    eng = Engine(ref_model, EngineConfig(kv_pool_bytes=8 << 20, chunk_size=8,
+                                         enable_prefix_caching=False),
+                 params=None, seed=0)
+    eng.submit(Request(rid="ref", prompt=list(prompt),
+                       sampling=SamplingParams(max_new_tokens=8)))
+    eng.run_until_done()
+    ref_out = eng.finished[0].output
+
+    sd = SpecDecodeEngine(target, draft,
+                          SpecDecodeConfig(k=3, kv_pool_bytes=16 << 20,
+                                           chunk_size=8),
+                          target_params=eng.params, seed=0)
+    out = sd.generate(prompt, max_new_tokens=8)
+    assert out == ref_out, (out, ref_out)
+    assert len(sd.accept_lengths) >= 1
+
+
+def test_spec_decode_shared_pool_two_page_sizes():
+    """The shared manager really holds two different page sizes (LCM>both)."""
+    tcfg = reduced(ARCHS["granite-3-2b"])
+    dcfg = reduced(ARCHS["internlm2-1.8b"], num_layers=2,
+                   vocab_size=tcfg.vocab_size)
+    dist = single_device_dist()
+    sd = SpecDecodeEngine(build_model(tcfg, dist), build_model(dcfg, dist),
+                          SpecDecodeConfig(k=2, kv_pool_bytes=16 << 20))
+    sizes = {s.name: s.page_units for s in sd.mgr.specs}
+    assert sizes["tgt_full_attn"] != sizes["draft_full_attn"]
+    assert sd.mgr.geometry.large_page_units % sizes["tgt_full_attn"] == 0
+    assert sd.mgr.geometry.large_page_units % sizes["draft_full_attn"] == 0
+    out = sd.generate(list(range(10)), max_new_tokens=6)
+    assert len(out) == 6

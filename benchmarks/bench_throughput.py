@@ -19,7 +19,7 @@ ARCH_SET = ("h2o-danube-3-4b", "zamba2-1.2b", "granite-3-2b")
 
 
 def run_engine(arch: str, mode: str, n_req=6, prompt=192, out=8,
-               pool=None):
+               pool=None, batching: str = "mixed"):
     cfg = reduced(ARCHS[arch])
     model = build_model(cfg, single_device_dist())
     if pool is None:
@@ -42,6 +42,8 @@ def run_engine(arch: str, mode: str, n_req=6, prompt=192, out=8,
         pool = max(pool, 8 * big * 2)   # >= 8 LCM large pages
     eng = Engine(model, EngineConfig(kv_pool_bytes=pool, max_running=8,
                                      chunk_size=32, memory_mode=mode,
+                                     batching_mode=batching,
+                                     max_num_batched_tokens=256,
                                      enable_prefix_caching=False))
     for i in range(n_req):
         eng.submit(Request(rid=f"r{i}", prompt=[(7 * i + j) % 101
@@ -60,14 +62,22 @@ def run_engine(arch: str, mode: str, n_req=6, prompt=192, out=8,
 def main(report=print):
     for arch in ARCH_SET:
         rows = {}
-        for mode in ("jenga", "paged-baseline"):
-            r = run_engine(arch, mode)
-            rows[mode] = r
-            report(f"e2e_{arch}_{mode},{r['wall_s']*1e6/max(1,r['steps']):.0f},"
+        # memory-mode A/B (paper Fig. 13/14) + batching-mode A/B: the
+        # token-budget mixed engine vs the legacy one-prefill-per-step
+        # schedule, identical pool budget (the continuous-batching win).
+        for tag, mode, batching in (
+                ("jenga", "jenga", "mixed"),
+                ("jenga-serial", "jenga", "serial"),
+                ("paged-baseline", "paged-baseline", "mixed")):
+            r = run_engine(arch, mode, batching=batching)
+            rows[tag] = r
+            report(f"e2e_{arch}_{tag},{r['wall_s']*1e6/max(1,r['steps']):.0f},"
                    f"steps={r['steps']} tok/step={r['tok_per_step']:.2f} "
                    f"finished={r['finished']} preempt={r['preemptions']}")
         sp = rows["paged-baseline"]["steps"] / max(1, rows["jenga"]["steps"])
         report(f"e2e_{arch}_speedup,0,steps_ratio={sp:.2f}x")
+        sb = rows["jenga-serial"]["steps"] / max(1, rows["jenga"]["steps"])
+        report(f"e2e_{arch}_batching_speedup,0,steps_ratio={sb:.2f}x")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the full pytest suite with the src/ layout on the
+# path. Record the final pass/fail line in CHANGES.md for every PR so
+# regressions are visible per PR.
+set -u
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -q "$@"

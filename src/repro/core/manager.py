@@ -132,6 +132,11 @@ class JengaKVCacheManager:
         self.rng = random.Random(seed)
         self.clock = 0
         self._aux: Dict[str, _ReqAux] = {}
+        # pages handed out by committed allocations since the last drain;
+        # the runner zeroes them before their first dispatch (a recycled
+        # large page can hold another type's stale bytes — e.g. fp32 state
+        # pairs that decode as NaN when read as bf16 K/V)
+        self._fresh_pages: List[Tuple[str, int]] = []
         # install the §5.4-step-3 cross-pool hook
         for pool in self.pools.values():
             pool._manager_evict_large = self._evict_large_for
@@ -392,56 +397,78 @@ class JengaKVCacheManager:
         return True, copy_ops
 
     # --------------------------------------------------------- allocation
-    def allocate_for_tokens(self, req: SequenceState, target: int) -> bool:
-        """Ensure page capacity so tokens [num_computed, target) can be
-        computed. Transactional: on failure nothing changes."""
-        aux = self._ensure_aux(req)
+    # The §5.4 transactional property is implemented with an undo journal so
+    # it composes across a whole step plan: ``allocate_for_batch`` commits
+    # page capacity for EVERY scheduled request of a step or rolls the whole
+    # plan back as one unit; ``allocate_for_tokens`` is the one-request case.
+
+    def _rollback_journal(self, journal: List[Tuple[str, SequenceState,
+                                                    str, TypedPool, int]]):
+        for kind, req, name, pool, eid in reversed(journal):
+            if kind == "table":
+                popped = req.page_tables[name].pop()
+                assert popped == eid, (name, popped, eid)
+            else:  # "state"
+                del req.state_pages[name]
+            pool.free(eid)
+
+    def _allocate_into(self, req: SequenceState, target: int,
+                       journal: List) -> bool:
+        """Grow ``req``'s tables so tokens [num_computed, target) can be
+        computed, recording every fresh page in ``journal``. Returns False
+        (without rolling back — the caller owns the journal) on exhaustion."""
+        self._ensure_aux(req)
         target = min(target, len(req.tokens))
-        fresh: List[Tuple[TypedPool, int]] = []
-        table_growth: Dict[str, int] = {}
-
-        def rollback() -> bool:
-            for pool, eid in fresh:
-                pool.free(eid)
-            for name, grew in table_growth.items():
-                if grew:
-                    del req.page_tables[name][-grew:]
-            return False
-
         for spec in self.specs:
             name, pool = spec.name, self.pools[spec.name]
             tpp = spec.tokens_per_page
-            if spec.kind in TOKEN_KINDS:
-                need_pages = -(-target // tpp)
-                table = req.page_tables.setdefault(name, [])
-                grow = need_pages - len(table)
-                for _ in range(max(0, grow)):
-                    eid = pool.allocate(req.rid)
-                    if eid is None:
-                        return rollback()
-                    table.append(eid)
-                    fresh.append((pool, eid))
-                    table_growth[name] = table_growth.get(name, 0) + 1
-            elif spec.kind in STATE_KINDS:
+            if spec.kind in STATE_KINDS:
                 if name not in req.state_pages:
                     eid = pool.allocate(req.rid)
                     if eid is None:
-                        return rollback()
+                        return False
                     req.state_pages[name] = eid
-                    fresh.append((pool, eid))
+                    journal.append(("state", req, name, pool, eid))
+                continue
+            if spec.kind in TOKEN_KINDS:
+                need_pages = -(-target // tpp)
             else:  # mm kinds
                 s_need = self._mm_storage_upto(req, spec, target)
                 need_pages = -(-s_need // tpp)
-                table = req.page_tables.setdefault(name, [])
-                grow = need_pages - len(table)
-                for _ in range(max(0, grow)):
-                    eid = pool.allocate(req.rid)
-                    if eid is None:
-                        return rollback()
-                    table.append(eid)
-                    fresh.append((pool, eid))
-                    table_growth[name] = table_growth.get(name, 0) + 1
+            table = req.page_tables.setdefault(name, [])
+            for _ in range(max(0, need_pages - len(table))):
+                eid = pool.allocate(req.rid)
+                if eid is None:
+                    return False
+                table.append(eid)
+                journal.append(("table", req, name, pool, eid))
         return True
+
+    def allocate_for_batch(self, reqs: Sequence[SequenceState],
+                           targets: Sequence[int]) -> bool:
+        """Batch-transactional allocation for one step plan: ensure capacity
+        so each ``reqs[i]`` can compute tokens [num_computed, targets[i]).
+        Either every request's allocation commits or nothing changes."""
+        assert len(reqs) == len(targets)
+        journal: List = []
+        for req, target in zip(reqs, targets):
+            if not self._allocate_into(req, target, journal):
+                self._rollback_journal(journal)
+                return False
+        self._fresh_pages.extend((name, eid)
+                                 for _, _, name, _, eid in journal)
+        return True
+
+    def drain_fresh_pages(self) -> List[Tuple[str, int]]:
+        """Pages allocated (committed) since the last drain, for device-side
+        zero-initialisation before their first use."""
+        out, self._fresh_pages = self._fresh_pages, []
+        return out
+
+    def allocate_for_tokens(self, req: SequenceState, target: int) -> bool:
+        """Ensure page capacity so tokens [num_computed, target) can be
+        computed. Transactional: on failure nothing changes."""
+        return self.allocate_for_batch([req], [target])
 
     # --------------------------------------------------------------- advance
     def advance(self, req: SequenceState, num_new: int) -> List[StateCopyOp]:
@@ -488,7 +515,7 @@ class JengaKVCacheManager:
                             pool.release_to_cache(eid, h)
                         else:
                             pool.free(eid)
-                        table[idx] = SequenceState.FREED
+                        req.mark_freed(name, idx)
             elif spec.kind in STATE_KINDS:
                 interval = spec.state_checkpoint_interval
                 chain = aux.state_chain.setdefault(name, [0, salt])
@@ -552,7 +579,7 @@ class JengaKVCacheManager:
                     pool.release_to_cache(eid, h)
                 else:
                     pool.free(eid)
-                table[idx] = SequenceState.FREED
+                req.mark_freed(spec.name, idx)
                 released += 1
         return released
 
@@ -605,6 +632,7 @@ class JengaKVCacheManager:
                     else:
                         pool.free(ck)
                 req.ckpt_pages[name] = {}
+        req.bump_epoch()
         self._aux.pop(req.rid, None)
 
     def rollback(self, req: SequenceState, num_computed: int,

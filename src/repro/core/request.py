@@ -25,6 +25,16 @@ class SequenceState:
     entries may be ``FREED`` (-1) once e.g. a sliding window passed them.
     ``state_pages[type]`` is the live recurrent-state page of state types;
     ``ckpt_pages[type][pos]`` are state snapshots at token position ``pos``.
+
+    Delta protocol for device-side mirrors (the serving ModelRunner keeps
+    persistent per-request block-table arrays and updates them incrementally
+    instead of rebuilding O(pages) state per step):
+      * appends are discovered by comparing mirrored length to
+        ``len(page_tables[type])`` (the manager only ever appends);
+      * mid-table frees (sliding-window retirement, vision free-on-consume)
+        are published to the append-only ``freed_events`` log;
+      * ``epoch`` is bumped whenever the tables are invalidated wholesale
+        (request free / preemption) — a mirror with a stale epoch rebuilds.
     """
 
     FREED = -1
@@ -45,6 +55,19 @@ class SequenceState:
     num_cached_pages: Dict[str, int] = dataclasses.field(default_factory=dict)
     prefix_hit_tokens: int = 0
     last_access: int = 0
+    # mirror-delta protocol (see class docstring)
+    epoch: int = 0
+    freed_events: List[Tuple[str, int]] = dataclasses.field(
+        default_factory=list)
+
+    def mark_freed(self, type_name: str, idx: int) -> None:
+        """Set a page-table entry to FREED and publish the delta."""
+        self.page_tables[type_name][idx] = self.FREED
+        self.freed_events.append((type_name, idx))
+
+    def bump_epoch(self) -> None:
+        self.epoch += 1
+        self.freed_events.clear()
 
     def append_token(self, tok: int) -> None:
         self.tokens.append(tok)

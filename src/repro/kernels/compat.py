@@ -1,0 +1,8 @@
+"""Pallas version compat shared by all kernels (one place to fix the next
+rename): ``pltpu.TPUCompilerParams`` became ``pltpu.CompilerParams``."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")

@@ -10,9 +10,8 @@ import jax
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    from jax.sharding import AxisType
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    from ..models.tp import make_mesh_auto
+    return make_mesh_auto(shape, axes)
 
 
 def production_dist(*, multi_pod: bool = False, sp: bool = False):

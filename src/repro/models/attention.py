@@ -171,13 +171,24 @@ def view_offset(view_shape, eid, layer, sel, slot):
 
 
 def gather_pages(view, tables, layer):
-    """view: (VP, L, 2, TPP, KVL, D); tables: (B, P) int32 (pad: 0 entries are
-    masked by seq_lens downstream). Returns k, v: (B, P*TPP, KVL, D).
+    """view: (VP, L, 2, TPP, KVL, D); tables: (B, P) int32 (entries < 0 are
+    invalid pads/frees). Returns k, v: (B, P*TPP, KVL, D).
 
     Layer is sliced BEFORE the page gather so the gather only moves this
-    layer's bytes (the slice itself is free)."""
+    layer's bytes (the slice itself is free).
+
+    Invalid entries are ZEROED, not merely masked downstream: the clamped
+    gather would otherwise read arbitrary units of the unified buffer —
+    including other types' pages, e.g. fp32 recurrent state bitcast into
+    bf16 pairs, whose halves can decode as NaN. A NaN V poisons the
+    partial-softmax merge even for fully-masked rows (exp(0)*NaN, and
+    NaN*0 == NaN in the rescale). VALID pages are safe without an isnan
+    scrub because the runner zero-initialises every freshly allocated page
+    (ModelRunner.zero_pages) before its first dispatch."""
     lview = jax.lax.dynamic_index_in_dim(view, layer, axis=1, keepdims=False)
     pages = jnp.take(lview, jnp.maximum(tables, 0), axis=0)  # (B,P,2,TPP,KVL,D)
+    valid = (tables >= 0)[:, :, None, None, None, None]
+    pages = jnp.where(valid, pages, 0)
     k = pages[:, :, 0]
     v = pages[:, :, 1]
     b, p, tpp, kvl, d = k.shape
@@ -280,9 +291,12 @@ def f32_to_bf16_pair(x):
 
 
 def read_state(view, layer, eids):
-    """State view: (VP, L, 2U) bf16. eids: (B,). Returns (B, U) f32."""
+    """State view: (VP, L, 2U) bf16. eids: (B,). Returns (B, U) f32.
+    Invalid (< 0, padded-row) eids read as zero state — the clamped gather
+    would otherwise hand NaN-decoding foreign bytes to the recurrent scan."""
     lview = jax.lax.dynamic_index_in_dim(view, layer, axis=1, keepdims=False)
     st = jnp.take(lview, jnp.maximum(eids, 0), axis=0)        # (B, 2U)
+    st = jnp.where((eids >= 0)[:, None], st, 0)
     return bf16_pair_to_f32(st)
 
 

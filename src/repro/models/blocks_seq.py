@@ -37,14 +37,27 @@ def mamba2_dims(d_model: int, expand: int, headdim: int, d_state: int,
 
 
 def _causal_conv(x, w, x_init=None):
-    """Depthwise causal conv: x (B,T,C), w (W,C). x_init: (B,W-1,C) carry."""
+    """Depthwise causal conv: x (B,T,C), w (W,C). x_init: (B,W-1,C) carry.
+    Returns (out, xp) where xp is the carry-prefixed input — the conv state
+    after token j is ``xp[:, j+1 : j+width]`` (callers slice/gather it)."""
     width = w.shape[0]
     if x_init is None:
         x_init = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
     xp = jnp.concatenate([x_init, x], axis=1)
     out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(width))
-    new_state = xp[:, -(width - 1):] if width > 1 else x_init
-    return out, new_state
+    return out, xp
+
+
+def _conv_state_at(xp, width: int, last_idx=None):
+    """Conv carry after the last *valid* token of each row: the ``width-1``
+    xp rows ending at that token (ragged mixed batches pad rows past
+    ``last_idx``; the naive trailing slice would capture pad garbage)."""
+    if width <= 1:
+        return xp[:, :0]
+    if last_idx is None:
+        return xp[:, -(width - 1):]
+    idx = last_idx[:, None] + 1 + jnp.arange(width - 1)[None]   # (B, W-1)
+    return jnp.take_along_axis(xp, idx[..., None], axis=1)
 
 
 def _mamba_project(p, x, md):
@@ -60,14 +73,23 @@ def _mamba_project(p, x, md):
 
 def mamba2_chunked(p, x, dist: Dist, md: dict, *, d_state: int, headdim: int,
                    conv_width: int, chunk: int = 128, norm_eps=1e-5,
-                   init_state=None):
-    """Mamba2 over a full sequence (train / prefill).
+                   init_state=None, length_mask=None, last_idx=None):
+    """Mamba2 over a full sequence (train / prefill / mixed serving batch).
 
-    x: (B, T, d) replicated. Returns (y, final_state_flat)."""
+    x: (B, T, d) replicated. Returns (y, final_state_flat).
+
+    Ragged mixed batches: ``length_mask`` (B, T) marks valid tokens and
+    ``last_idx`` (B,) the last valid slot per row. Padded tokens get dt=0 —
+    zero decay exponent and zero state contribution — so the final SSM state
+    is exactly the state after each row's last real token; the conv carry is
+    gathered at ``last_idx`` for the same reason. Outputs at padded slots
+    are garbage and must be discarded by the caller."""
     b, t, _ = x.shape
     hl, dil = md["h_local"], md["d_in_local"]
     xn = rms_norm(x, p["norm"], norm_eps)
     z, xr, Bm, Cm, dt = _mamba_project(p, xn, md)
+    if length_mask is not None:
+        dt = dt * length_mask[..., None].astype(dt.dtype)
 
     if init_state is not None:
         ssm0, conv0 = split_mamba_state(init_state, md, d_state, headdim,
@@ -77,7 +99,8 @@ def mamba2_chunked(p, x, dist: Dist, md: dict, *, d_state: int, headdim: int,
         conv0 = jnp.zeros((b, conv_width - 1, dil + 2 * d_state), x.dtype)
 
     xbc = jnp.concatenate([xr, Bm, Cm], axis=-1)
-    xbc, conv_state = _causal_conv(xbc, p["conv_w"], conv0)
+    xbc, xp_conv = _causal_conv(xbc, p["conv_w"], conv0)
+    conv_state = _conv_state_at(xp_conv, conv_width, last_idx)
     xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
     xr = xbc[..., :dil]
     Bm = xbc[..., dil:dil + d_state].astype(jnp.float32)
@@ -145,7 +168,8 @@ def mamba2_step(p, x, state_flat, dist: Dist, md: dict, *, d_state: int,
     xn = rms_norm(x, p["norm"], norm_eps)
     z, xr, Bm, Cm, dt = _mamba_project(p, xn, md)
     xbc = jnp.concatenate([xr, Bm, Cm], axis=-1)              # (B,1,·)
-    xbc, conv = _causal_conv(xbc, p["conv_w"], conv)
+    xbc, xp_conv = _causal_conv(xbc, p["conv_w"], conv)
+    conv = _conv_state_at(xp_conv, conv_width)
     xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
     xr = xbc[:, 0, :dil]
     Bm = xbc[:, 0, dil:dil + d_state].astype(jnp.float32)
@@ -218,8 +242,14 @@ def _rwkv_proj(p, x, x_prev, rd, head_size: int):
 
 
 def rwkv6_chunked(p, x, dist: Dist, rd: dict, *, head_size: int,
-                  chunk: int = 64, norm_eps=1e-5, init_state=None):
-    """RWKV6 time-mix + channel-mix over a sequence. Returns (y, state)."""
+                  chunk: int = 64, norm_eps=1e-5, init_state=None,
+                  length_mask=None, last_idx=None):
+    """RWKV6 time-mix + channel-mix over a sequence. Returns (y, state).
+
+    Ragged mixed batches: padded tokens get k=0 (no state contribution) and
+    logw=0 (no decay), so the final wkv state is exactly the state after
+    each row's last real token; the token-shift carries are gathered at
+    ``last_idx`` instead of the trailing (possibly padded) slot."""
     b, t, d = x.shape
     hl = rd["h_local"]
     if init_state is not None:
@@ -233,6 +263,10 @@ def rwkv6_chunked(p, x, dist: Dist, rd: dict, *, head_size: int,
     xn = rms_norm(x, p["ln1"], norm_eps)
     x_prev = jnp.concatenate([att_shift, xn[:, :-1]], axis=1)
     r, k, v, g, logw = _rwkv_proj(p, xn, x_prev, rd, head_size)
+    if length_mask is not None:
+        valid = length_mask[:, :, None, None]
+        k = jnp.where(valid, k, 0.0)
+        logw = jnp.where(valid, logw, 0.0)
     u = p["u"].astype(jnp.float32)                            # (H_local, hs)
 
     nchunk = -(-t // chunk)
@@ -281,7 +315,13 @@ def rwkv6_chunked(p, x, dist: Dist, rd: dict, *, head_size: int,
     xc_prev = jnp.concatenate([cm_shift, xc[:, :-1]], axis=1)
     cm = _channel_mix(p, xc, xc_prev, dist)
     x = x + cm
-    state = flatten_rwkv_state(S_fin, xn[:, -1:], xc[:, -1:], rd)
+    if last_idx is None:
+        att_out, cm_out = xn[:, -1:], xc[:, -1:]
+    else:
+        gather = lambda a: jnp.take_along_axis(
+            a, last_idx[:, None, None].astype(jnp.int32), axis=1)
+        att_out, cm_out = gather(xn), gather(xc)
+    state = flatten_rwkv_state(S_fin, att_out, cm_out, rd)
     return x, state
 
 

@@ -23,7 +23,7 @@ from .lm import DecoderLM, DecodeBatch, _dp_spec
 from .params import PD
 from .rotary import sinusoidal_positions
 from .tp import (embed_lookup, expand_gqa_kv, expand_gqa_o, expand_gqa_q,
-                 logits_local, psum_dp, psum_tp, replica_info,
+                 logits_local, psum_dp, psum_tp, replica_info, shard_map,
                  sharded_softmax_xent)
 
 MAX_DEC_POS = 32768 + 8
@@ -168,7 +168,7 @@ class EncDecLM(DecoderLM):
     def train_loss(self, params, tokens, targets, *, enc_embeds=None, **kw):
         dist = self.dist
         dp = _dp_spec(dist)
-        fn = jax.shard_map(
+        fn = shard_map(
             self._train_body_ed, mesh=dist.mesh,
             in_specs=(self.specs(), P(dp), P(dp), P(dp)),
             out_specs=P(), check_vma=False)

@@ -199,12 +199,19 @@ class HybridLM(DecoderLM):
         mkw = self._mamba_kw()
         sp_axis = "data" if dist.sp else None
 
+        # ragged mixed batch: rows may have fewer valid tokens than T; the
+        # chunked scan must not fold padded tokens into the carried state
+        lidx = batch.last_idx
+        lmask = (None if lidx is None else
+                 jnp.arange(t)[None] <= lidx[:, None])
+
         def run_mamba(pj, x, buf, layer_idx):
             view = buf.reshape(views["mamba"])
             st = A.read_state(view, layer_idx, state_eids)
             if prefill:
                 x, st = BS.mamba2_chunked(pj, x, dist, self.md,
-                                          init_state=st, **mkw)
+                                          init_state=st, length_mask=lmask,
+                                          last_idx=lidx, **mkw)
             else:
                 x, st = BS.mamba2_step(pj, x, st, dist, self.md, **mkw)
             buf = A.write_state(buf, views["mamba"], layer_idx,

@@ -23,7 +23,7 @@ from .params import PD, init_params, param_specs, param_struct
 from .rotary import mrope_positions as _mrope3
 from .tp import (Dist, embed_lookup, expand_gqa_kv, expand_gqa_o,
                  expand_gqa_q, gather_logits, logits_local, psum_dp, psum_tp,
-                 replica_info, sharded_softmax_xent)
+                 replica_info, shard_map, sharded_softmax_xent)
 
 
 @dataclasses.dataclass
@@ -287,7 +287,7 @@ class DecoderLM:
         if cfg.family == "vlm" and mm_embeds is not None:
             extra_specs = [P(dp), P(dp), P(None, dp)]
             args += [mm_embeds, mm_mask, mrope_pos]
-        fn = jax.shard_map(
+        fn = shard_map(
             partial(self._train_body, has_mm=bool(extra_specs)),
             mesh=dist.mesh,
             in_specs=tuple(in_specs) + tuple(extra_specs),
@@ -344,7 +344,17 @@ class DecoderLM:
     # --------------------------------------------------------------- serve
     def serve_step(self, params, buffer, batch: DecodeBatch, *,
                    prefill: bool):
-        """Unified prefill/decode step. Returns (logits (B, V_pad), buffer)."""
+        """One serving step over a MIXED batch: rows are independent
+        sequences with ragged per-row token counts (concurrent prefill
+        chunks and single-token decodes share the dispatch). Correctness is
+        carried by per-row data, not a global phase: absolute ``positions``
+        (SENTINEL at padded slots — never attended), per-row chunk starts
+        for the old-page mask, ``last_idx`` to pick each row's logits, and
+        negative ``write_eids`` to drop padded writes. The ``prefill`` flag
+        only selects the kernel schedule (chunked flash vs materialized
+        T=1 decode), never the masking semantics.
+
+        Returns (logits (B, V_pad), buffer)."""
         cfg, dist = self.cfg, self.dist
         dp = _dp_spec(dist)
         sp = dist.sp
@@ -368,7 +378,7 @@ class DecoderLM:
         )
         buf_spec = P(shard_dim_spec, "model")
         out_logit_spec = P(None, "model") if sp else P(dp, "model")
-        fn = jax.shard_map(
+        fn = shard_map(
             partial(self._serve_body, prefill=prefill),
             mesh=dist.mesh,
             in_specs=(self.specs(), buf_spec, batch_specs),

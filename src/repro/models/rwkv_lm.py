@@ -129,6 +129,11 @@ class RWKVLM(DecoderLM):
         x = embed_lookup(batch.tokens, params["embed"], dist)
         views = self._layer_views(buffer)
         state_eids = jnp.squeeze(batch.state_eids["rwkv"], axis=0)
+        # ragged mixed batch: padded tokens must not enter the wkv state
+        t = batch.tokens.shape[1]
+        lidx = batch.last_idx
+        lmask = (None if lidx is None else
+                 jnp.arange(t)[None] <= lidx[:, None])
 
         def body(carry, xs):
             x, buf = carry
@@ -138,7 +143,8 @@ class RWKVLM(DecoderLM):
             if prefill:
                 x, st = BS.rwkv6_chunked(pj, x, dist, self.rd,
                                          head_size=cfg.rwkv_head_size,
-                                         norm_eps=cfg.norm_eps, init_state=st)
+                                         norm_eps=cfg.norm_eps, init_state=st,
+                                         length_mask=lmask, last_idx=lidx)
             else:
                 x, st = BS.rwkv6_step(pj, x, st, dist, self.rd,
                                       head_size=cfg.rwkv_head_size,

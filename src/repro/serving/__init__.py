@@ -1,5 +1,5 @@
 from .engine import Engine, EngineConfig, StepMetrics, stub_modality_embed
 from ..core.request import MMItem
 from .request import Request, SamplingParams, Status
-from .scheduler import Scheduler, SchedulerConfig
+from .scheduler import ScheduledSeq, Scheduler, SchedulerConfig, StepPlan
 from .runner import ModelRunner

@@ -1,10 +1,26 @@
-"""Inference engine: scheduler + Jenga manager + model runner.
+"""Inference engine: token-budget continuous batching over the Jenga
+manager.
 
-Each ``step()``: schedule -> (state restores) -> one prefill chunk ->
-decode batch -> sample -> advance/checkpoint/retire -> finish.
-Collects the per-step metrics the paper's figures are built from
-(decode batch size Fig.15, memory breakdown Fig.16, hit rates Fig.17,
-encoder runs Fig.18)."""
+Each ``step()`` is build-batch -> ONE ``serve_step`` dispatch -> advance /
+sample / retire:
+
+  1. ``Scheduler.schedule()`` packs a per-step token budget across ALL
+     running requests — any number of concurrent prefill chunks plus every
+     decode — and commits the step's page allocation transactionally;
+  2. the step's state-restore copies run as one batched dispatch;
+  3. ``ModelRunner.run_plan`` executes the whole mixed plan in a single
+     jitted ``serve_step`` (ragged rows padded to the bucket);
+  4. every scheduled request advances; requests past their prompt sample a
+     token; checkpoint copies emitted by ``advance`` run as one batched
+     dispatch at the end of the step.
+
+``batching_mode="serial"`` reproduces the legacy one-prefill-chunk-per-step
+engine (prefill and decode as separate dispatches) for step-count A/Bs and
+determinism tests.
+
+Collects the per-step metrics the paper's figures are built from (decode
+batch size Fig.15, memory breakdown Fig.16, hit rates Fig.17, encoder runs
+Fig.18) plus the mixed-batch packing stats (tokens/step, prefills/step)."""
 from __future__ import annotations
 
 import dataclasses
@@ -13,11 +29,11 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from ..core.manager import JengaKVCacheManager
+from ..core.manager import JengaKVCacheManager, StateCopyOp
 from ..core.spec import KVCacheSpec
 from .request import Request, SamplingParams, Status
 from .runner import ModelRunner
-from .scheduler import Scheduler, SchedulerConfig
+from .scheduler import ScheduledSeq, Scheduler, SchedulerConfig, StepPlan
 
 
 def stub_modality_embed(mm_hash: int, offset: int, dim: int) -> np.ndarray:
@@ -31,7 +47,9 @@ def stub_modality_embed(mm_hash: int, offset: int, dim: int) -> np.ndarray:
 class EngineConfig:
     kv_pool_bytes: int = 64 << 20
     max_running: int = 16
-    chunk_size: int = 64
+    chunk_size: int = 64               # per-request prefill chunk cap
+    max_num_batched_tokens: int = 256  # per-step mixed-batch token budget
+    batching_mode: str = "mixed"       # "mixed" | "serial" (legacy 1-prefill)
     enable_prefix_caching: bool = True
     memory_mode: str = "jenga"       # "jenga" | "paged-baseline"
     geometry_mode: str = "lcm"        # "lcm" | "max"
@@ -41,13 +59,15 @@ class EngineConfig:
 @dataclasses.dataclass
 class StepMetrics:
     step: int
-    decode_batch: int
-    prefill_tokens: int
+    decode_batch: int          # decode sequences in this step's plan
+    prefill_tokens: int        # prefill tokens across ALL chunks this step
     used_units: int
     evictable_units: int
     empty_units: int
     free_units: int
     waste_units: int = 0
+    num_prefills: int = 0      # concurrent prefill chunks this step
+    batched_tokens: int = 0    # total tokens in the mixed batch
 
 
 class Engine:
@@ -55,6 +75,7 @@ class Engine:
                  params=None, seed: int = 0):
         self.model = model
         self.cfg = cfg
+        assert cfg.batching_mode in ("mixed", "serial"), cfg.batching_mode
         baseline = cfg.memory_mode == "paged-baseline"
         self.mgr = JengaKVCacheManager(
             model.kv_specs(),
@@ -67,8 +88,11 @@ class Engine:
         if baseline:
             self._apply_baseline_semantics()
         self.scheduler = Scheduler(
-            self.mgr, SchedulerConfig(max_running=cfg.max_running,
-                                      chunk_size=cfg.chunk_size))
+            self.mgr, SchedulerConfig(
+                max_running=cfg.max_running,
+                chunk_size=cfg.chunk_size,
+                max_num_batched_tokens=cfg.max_num_batched_tokens,
+                serial=cfg.batching_mode == "serial"))
         self.runner = ModelRunner(model, self.mgr,
                                   stub_embed_fn=stub_modality_embed)
         self.params = params if params is not None else model.init(seed)
@@ -110,64 +134,78 @@ class Engine:
         if not self.scheduler.has_work():
             return None
         plan = self.scheduler.schedule()
-        for op in plan.copy_ops:
-            self.runner.copy_page(op.type_name, op.src_page, op.dst_page)
+        # state restores of this step's admissions: one batched dispatch
+        self.runner.apply_copies(plan.copy_ops)
 
-        # ---- one prefill chunk
-        if plan.prefill is not None:
-            req = plan.prefill
-            seq = req.seq
-            if (self.model.cfg.family in ("vlm", "encdec")
-                    and seq.num_computed == 0):
-                items = seq.mm_items or seq.encoder_items
-                for it in items:
-                    if it.mm_hash not in self.mm_seen or not \
-                            self.cfg.enable_prefix_caching:
-                        self.encoder_runs += 1
-                        self.mm_seen.add(it.mm_hash)
-            logits = self.runner.run(self.params, [req], prefill=True,
-                                     chunk=plan.prefill_tokens)
-            n = plan.prefill_tokens
-            ops = self.mgr.advance(seq, n)
-            for op in ops:
-                self.runner.copy_page(op.type_name, op.src_page, op.dst_page)
-            self.mgr.consume_mm(seq, seq.num_computed)
-            self.mgr.touch(seq)
-            if not req.in_prefill:      # prompt complete -> first token
-                tok = self._sample(req, logits[0])
-                req.output.append(tok)
-                seq.append_token(tok)
-                req.first_token_step = self.step_count
-                self._maybe_finish(req)
-
-        # ---- decode batch
-        if plan.decodes:
-            logits = self.runner.run(self.params, plan.decodes, prefill=False)
-            for i, req in enumerate(plan.decodes):
-                seq = req.seq
-                ops = self.mgr.advance(seq, 1)
-                for op in ops:
-                    self.runner.copy_page(op.type_name, op.src_page,
-                                          op.dst_page)
-                self.mgr.touch(seq)
-                tok = self._sample(req, logits[i])
-                req.output.append(tok)
-                seq.append_token(tok)
-                self._maybe_finish(req)
+        n_decodes = len(plan.decodes)
+        n_prefills = len(plan.prefills)
+        prefill_tokens = plan.prefill_tokens
+        batched_tokens = plan.total_tokens
+        if plan.scheduled:
+            self._count_encoder_runs(plan.scheduled)
+            if self.cfg.batching_mode == "serial":
+                # legacy two-dispatch step: prefill chunk, then decode batch
+                groups = [g for g in (plan.prefills,
+                                      [s for s in plan.scheduled
+                                       if not s.is_prefill]) if g]
+            else:
+                groups = [plan.scheduled]
+            post_ops: List[StateCopyOp] = []
+            for group in groups:
+                logits = self.runner.run_plan(
+                    self.params, [(s.req, s.num_tokens) for s in group])
+                for i, s in enumerate(group):
+                    post_ops.extend(self._advance(s, logits[i]))
+            # checkpoint copies emitted while advancing: one batched dispatch
+            self.runner.apply_copies(post_ops)
 
         stats = self.mgr.memory_stats()
         m = StepMetrics(
             step=self.step_count,
-            decode_batch=len(plan.decodes),
-            prefill_tokens=plan.prefill_tokens,
+            decode_batch=n_decodes,
+            prefill_tokens=prefill_tokens,
             used_units=stats.used_units,
             evictable_units=stats.evictable_units,
             empty_units=stats.empty_units,
             free_units=stats.free_units,
+            num_prefills=n_prefills,
+            batched_tokens=batched_tokens,
         )
         self.metrics.append(m)
         self.step_count += 1
         return m
+
+    def _count_encoder_runs(self, scheduled: Sequence[ScheduledSeq]) -> None:
+        if self.model.cfg.family not in ("vlm", "encdec"):
+            return
+        for s in scheduled:
+            seq = s.req.seq
+            if not s.is_prefill or seq.num_computed != 0:
+                continue
+            for it in (seq.mm_items or seq.encoder_items):
+                if it.mm_hash not in self.mm_seen or not \
+                        self.cfg.enable_prefix_caching:
+                    self.encoder_runs += 1
+                    self.mm_seen.add(it.mm_hash)
+
+    def _advance(self, s: ScheduledSeq, logits: np.ndarray
+                 ) -> List[StateCopyOp]:
+        """Post-dispatch bookkeeping for one scheduled sequence: record the
+        computed tokens with the manager, sample once past the prompt, and
+        return any state-checkpoint copy ops for batched execution."""
+        req, seq = s.req, s.req.seq
+        ops = self.mgr.advance(seq, s.num_tokens)
+        if s.is_prefill:    # vision free-on-consume only fires during prefill
+            self.mgr.consume_mm(seq, seq.num_computed)
+        self.mgr.touch(seq)
+        if not req.in_prefill:          # decode, or prompt just completed
+            tok = self._sample(req, logits)
+            req.output.append(tok)
+            seq.append_token(tok)
+            if req.first_token_step is None:
+                req.first_token_step = self.step_count
+            self._maybe_finish(req)
+        return ops
 
     def _sample(self, req: Request, logits: np.ndarray) -> int:
         v = self.model.cfg.vocab_size
@@ -185,6 +223,7 @@ class Engine:
         if req.is_done():
             req.finished_step = self.step_count
             self.scheduler.finish(req, cache=True)
+            self.runner.forget(req.rid)
             self.finished.append(req)
 
     # ----------------------------------------------------------------- run

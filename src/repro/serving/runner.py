@@ -1,17 +1,31 @@
 """ModelRunner: builds padded device batches from Jenga manager state and
 runs bucketed jitted serve steps (no retrace across allocator changes —
-exec page ids are plain i32 data, the paper's §4.2 property)."""
+exec page ids are plain i32 data, the paper's §4.2 property).
+
+Mixed-batch model: one ``run_plan`` call executes a whole scheduler step —
+any number of concurrent prefill chunks plus all decodes — as a single
+dispatch. Per-sequence token counts are ragged; rows are padded to the
+(B, T) bucket with SENTINEL positions so padded slots can never attend or
+be attended to.
+
+Host-side cost model: per-request block tables are kept as persistent
+numpy mirrors updated incrementally from the manager's append/free deltas
+(``SequenceState.freed_events`` + table length), instead of re-walking
+O(pages) python lists per request per step. All ``StateCopyOp``s of a step
+phase execute as one batched gather/scatter dispatch per KV type instead of
+one jit call per op.
+"""
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.manager import JengaKVCacheManager
+from ..core.manager import JengaKVCacheManager, StateCopyOp
 from ..core.request import SequenceState
 from ..core.spec import lcm as _lcm
 from ..models.lm import DecodeBatch
@@ -27,6 +41,33 @@ def _pow2(n: int, lo: int = 1) -> int:
     return p
 
 
+class _SeqMirror:
+    """Persistent per-request device-batch state: block-table + slot-position
+    arrays per KV type, grown geometrically and patched from manager deltas."""
+
+    __slots__ = ("epoch", "evt_cursor", "table", "pos", "n")
+
+    def __init__(self, epoch: int):
+        self.epoch = epoch
+        self.evt_cursor = 0
+        self.table: Dict[str, np.ndarray] = {}
+        self.pos: Dict[str, np.ndarray] = {}
+        self.n: Dict[str, int] = {}
+
+    def _ensure(self, name: str, cap: int) -> None:
+        cur = self.table.get(name)
+        if cur is not None and cur.shape[0] >= cap:
+            return
+        new_cap = _pow2(cap, 8)
+        table = np.full((new_cap,), -1, np.int32)
+        pos = np.full((new_cap,), SENTINEL_POS, np.int32)
+        if cur is not None:
+            table[: cur.shape[0]] = cur
+            pos[: cur.shape[0]] = self.pos[name]
+        self.table[name] = table
+        self.pos[name] = pos
+
+
 class ModelRunner:
     def __init__(self, model, manager: JengaKVCacheManager,
                  stub_embed_fn=None):
@@ -39,48 +80,71 @@ class ModelRunner:
         self.buffer = jnp.zeros((1, 1, units), jnp.bfloat16)
         self._steps: Dict = {}
         self._copy_fn = None
+        self._zero_fn = None
+        self._batch_copy_fns: Dict = {}
+        self._batch_zero_fns: Dict = {}
+        self._mirrors: Dict[str, _SeqMirror] = {}
+        self._table_specs = {n: s for n, s in self.specs.items()
+                             if s.kind not in ("mamba", "rwkv")}
+        self._state_specs = {n: s for n, s in self.specs.items()
+                             if s.kind in ("mamba", "rwkv")}
+
+    # -------------------------------------------------------------- mirrors
+    def _mirror(self, seq: SequenceState) -> _SeqMirror:
+        """Sync this sequence's mirror from the manager's deltas: new table
+        entries are appended, freed entries patched from ``freed_events``,
+        and a stale ``epoch`` (free/preemption) forces a rebuild."""
+        m = self._mirrors.get(seq.rid)
+        if m is None or m.epoch != seq.epoch:
+            m = _SeqMirror(seq.epoch)
+            self._mirrors[seq.rid] = m
+        for name, idx in seq.freed_events[m.evt_cursor:]:
+            if idx < m.n.get(name, 0):
+                m.table[name][idx] = -1
+                m.pos[name][idx] = SENTINEL_POS
+        m.evt_cursor = len(seq.freed_events)
+        for name, spec in self._table_specs.items():
+            entries = seq.page_tables.get(name)
+            if not entries:
+                continue
+            n0 = m.n.get(name, 0)
+            if len(entries) <= n0:
+                continue
+            m._ensure(name, len(entries))
+            new = np.fromiter(entries[n0:], np.int32, len(entries) - n0)
+            m.table[name][n0:len(entries)] = new
+            tpp = spec.tokens_per_page
+            m.pos[name][n0:len(entries)] = np.where(
+                new == SequenceState.FREED, SENTINEL_POS,
+                np.arange(n0, len(entries), dtype=np.int32) * tpp)
+            m.n[name] = len(entries)
+        return m
+
+    def forget(self, rid: str) -> None:
+        """Drop the mirror of a finished request."""
+        self._mirrors.pop(rid, None)
 
     # ----------------------------------------------------------- batching
-    def _attn_table(self, seq: SequenceState, name: str, p_max: int):
-        spec = self.specs[name]
-        tpp = spec.tokens_per_page
-        table = np.full((p_max,), -1, np.int32)
-        pos = np.full((p_max,), SENTINEL_POS, np.int32)
-        entries = seq.page_tables.get(name, [])
-        for i, e in enumerate(entries[:p_max]):
-            if e != SequenceState.FREED:
-                table[i] = e
-                pos[i] = i * tpp
-        return table, pos
-
-    def _mm_table(self, seq: SequenceState, name: str, p_max: int):
-        table = np.full((p_max,), -1, np.int32)
-        pos = np.full((p_max,), SENTINEL_POS, np.int32)
-        spec = self.specs[name]
-        entries = seq.page_tables.get(name, [])
-        for i, e in enumerate(entries[:p_max]):
-            if e != SequenceState.FREED:
-                table[i] = e
-                pos[i] = i * spec.tokens_per_page
-        return table, pos
-
-    def build_batch(self, reqs: List[Request], *, prefill: bool,
-                    chunk: int = 0) -> Tuple[DecodeBatch, dict]:
-        """Pad to bucketed shapes; returns (batch, bucket_info)."""
-        mgr, specs = self.mgr, self.specs
-        n = len(reqs)
+    def build_plan(self, items: Sequence[Tuple[Request, int]]
+                   ) -> Tuple[DecodeBatch, dict]:
+        """Flatten one scheduler step — ``items`` is [(request, num_tokens)]
+        with ragged per-sequence token counts — into a padded (B, T) mixed
+        batch. Padded slots get SENTINEL positions (never attended), padded
+        rows get -1 exec ids (writes dropped). Returns (batch, info)."""
+        specs = self.specs
+        n = len(items)
+        assert n > 0
         B = _pow2(n)
-        T = _pow2(chunk) if prefill else 1
+        T = _pow2(max(nt for _, nt in items))
+        mirrors = [self._mirror(r.seq) for r, _ in items]
         p_need: Dict[str, int] = {}
-        for name, s in specs.items():
-            if s.kind in ("mamba", "rwkv"):
-                continue
+        for name in self._table_specs:
             longest = 1
-            for r in reqs:
-                longest = max(longest, len(r.seq.page_tables.get(name, [])))
+            for m in mirrors:
+                longest = max(longest, m.n.get(name, 0))
             p_need[name] = _pow2(longest, 4)
         tokens = np.zeros((B, T), np.int32)
-        positions = np.zeros((B, T), np.int32)
+        positions = np.full((B, T), SENTINEL_POS, np.int32)
         seq_lens = np.ones((B,), np.int32)
         last_idx = np.zeros((B,), np.int32)
         tables = {k: np.full((1, 1, B, p), -1, np.int32)
@@ -90,49 +154,56 @@ class ModelRunner:
         write_eids = {k: np.full((1, 1, B, T), -1, np.int32)
                       for k in p_need}
         state_eids = {s.name: np.full((1, B), -1, np.int32)
-                      for s in specs.values() if s.kind in ("mamba", "rwkv")}
+                      for s in self._state_specs.values()}
+        cfg = self.model.cfg
+        has_mm = cfg.family == "vlm" and any(
+            r.in_prefill for r, _ in items)
+        has_enc = cfg.family == "encdec" and any(
+            r.in_prefill and r.seq.num_computed == 0 for r, _ in items)
         mm_embeds = mm_mask = mrope = None
         enc_embeds = enc_write = enc_lens = None
-        cfg = self.model.cfg
-        if cfg.family == "vlm" and prefill:
+        if has_mm:
             mm_embeds = np.zeros((B, T, cfg.d_model), np.float32)
             mm_mask = np.zeros((B, T), bool)
-            mrope = np.zeros((3, B, T), np.int32)
         if cfg.family == "encdec":
             enc_lens = np.zeros((B,), np.int32)
-            if prefill:
+            if has_enc:
                 enc_embeds = np.zeros((B, cfg.encoder_seq, cfg.d_model),
                                       np.float32)
                 enc_write = np.full((1, 1, B, cfg.encoder_seq), -1, np.int32)
 
-        for bi, r in enumerate(reqs):
+        fresh_state: List[Tuple[str, int]] = []
+        for bi, ((r, t_real), m) in enumerate(zip(items, mirrors)):
             seq = r.seq
             start = seq.num_computed
-            t_real = chunk if prefill else 1
+            if start == 0:
+                # a request's very first chunk must see zero recurrent state;
+                # its freshly allocated state pages hold whatever bytes last
+                # lived in those units (prefix-cache restores land at
+                # start > 0, so they are never clobbered here)
+                fresh_state.extend((name, seq.state_pages[name])
+                                   for name in self._state_specs
+                                   if name in seq.state_pages)
             toks = seq.tokens[start:start + t_real]
             tokens[bi, :len(toks)] = toks
             positions[bi, :t_real] = np.arange(start, start + t_real)
-            positions[bi, t_real:] = 0
             seq_lens[bi] = start + t_real
             last_idx[bi] = t_real - 1
-            for name in p_need:
-                spec = specs[name]
+            for name, spec in self._table_specs.items():
+                np_ = p_need[name]
+                nm = min(m.n.get(name, 0), np_)
+                if nm:
+                    tables[name][0, 0, bi, :nm] = m.table[name][:nm]
+                    page_pos[name][0, 0, bi, :nm] = m.pos[name][:nm]
                 if spec.kind in ("full_attn", "swa"):
-                    tb, pp = self._attn_table(seq, name, p_need[name])
-                    tables[name][0, 0, bi] = tb
-                    page_pos[name][0, 0, bi] = pp
                     tpp = spec.tokens_per_page
-                    for j in range(t_real):
-                        pg = (start + j) // tpp
-                        write_eids[name][0, 0, bi, j] = tb[pg]
-                else:  # mm kinds
-                    tb, pp = self._mm_table(seq, name, p_need[name])
-                    tables[name][0, 0, bi] = tb
-                    page_pos[name][0, 0, bi] = pp
+                    pgs = (start + np.arange(t_real)) // tpp
+                    write_eids[name][0, 0, bi, :t_real] = \
+                        m.table[name][pgs] if m.n.get(name, 0) else -1
             for name in state_eids:
                 if name in seq.state_pages:
                     state_eids[name][0, bi] = seq.state_pages[name]
-            if cfg.family == "vlm" and prefill and self.stub_embed_fn:
+            if has_mm and self.stub_embed_fn:
                 for it in seq.mm_items:
                     for off in range(it.length):
                         p = it.start + off
@@ -140,23 +211,26 @@ class ModelRunner:
                             mm_embeds[bi, p - start] = self.stub_embed_fn(
                                 it.mm_hash, off, cfg.d_model)
                             mm_mask[bi, p - start] = True
-                mrope[:, bi] = positions[bi][None]
             if cfg.family == "encdec":
                 total_enc = sum(it.length for it in seq.encoder_items)
                 enc_lens[bi] = total_enc
-                if prefill and start == 0 and self.stub_embed_fn:
+                if has_enc and start == 0 and r.in_prefill \
+                        and self.stub_embed_fn:
                     off0 = 0
                     for it in seq.encoder_items:
                         for off in range(it.length):
                             enc_embeds[bi, off0 + off] = self.stub_embed_fn(
                                 it.mm_hash, off, cfg.d_model)
                         off0 += it.length
-                    ctab = seq.page_tables.get("cross_attn", [])
+                    ctab = m.table.get("cross_attn")
                     tpp = specs["cross_attn"].tokens_per_page
                     for j in range(min(total_enc, cfg.encoder_seq)):
                         pg = j // tpp
-                        if pg < len(ctab) and ctab[pg] >= 0:
+                        if ctab is not None and pg < m.n.get(
+                                "cross_attn", 0) and ctab[pg] >= 0:
                             enc_write[0, 0, bi, j] = ctab[pg]
+        if has_mm:
+            mrope = np.broadcast_to(positions[None], (3, B, T)).copy()
 
         batch = DecodeBatch(
             tokens=jnp.asarray(tokens), positions=jnp.asarray(positions),
@@ -168,29 +242,125 @@ class ModelRunner:
             mm_embeds=None if mm_embeds is None else jnp.asarray(mm_embeds),
             mm_mask=None if mm_mask is None else jnp.asarray(mm_mask),
             mrope_pos=None if mrope is None else jnp.asarray(mrope),
-            last_idx=jnp.asarray(last_idx) if prefill else None,
+            last_idx=jnp.asarray(last_idx),
             enc_embeds=None if enc_embeds is None else jnp.asarray(enc_embeds),
             enc_write_eids=None if enc_write is None else jnp.asarray(enc_write),
             enc_lens=None if enc_lens is None else jnp.asarray(enc_lens),
         )
-        key = (prefill, B, T, tuple(sorted(p_need.items())),
-               mm_embeds is not None, enc_embeds is not None)
-        return batch, {"key": key, "n": n}
+        # T==1 buckets take the cheap materialized decode path; any larger
+        # bucket (or an encoder run) uses the chunked prefill path. Both are
+        # exact for every row thanks to position-based masking.
+        prefill = T > 1 or has_enc
+        key = (prefill, B, T, tuple(sorted(p_need.items())), has_mm, has_enc)
+        return batch, {"key": key, "n": n, "prefill": prefill,
+                       "fresh_state": fresh_state}
 
     # ----------------------------------------------------------------- run
-    def run(self, params, reqs: List[Request], *, prefill: bool,
-            chunk: int = 0) -> np.ndarray:
-        batch, info = self.build_batch(reqs, prefill=prefill, chunk=chunk)
+    def run_plan(self, params, items: Sequence[Tuple[Request, int]]
+                 ) -> np.ndarray:
+        """Execute one mixed step plan in a single jitted dispatch. Returns
+        last-token logits, one row per item, in plan order."""
+        batch, info = self.build_plan(items)
+        self.zero_pages(self.mgr.drain_fresh_pages())
+        for name, eid in info["fresh_state"]:
+            self.zero_page(name, eid)
         key = info["key"]
         fn = self._steps.get(key)
         if fn is None:
-            fn = jax.jit(partial(self.model.serve_step, prefill=prefill),
+            fn = jax.jit(partial(self.model.serve_step,
+                                 prefill=info["prefill"]),
                          donate_argnums=(1,))
             self._steps[key] = fn
         logits, self.buffer = fn(params, self.buffer, batch)
         return np.asarray(logits[:info["n"]], np.float32)
 
     # ------------------------------------------------------------- copies
+    def apply_copies(self, ops: Sequence[StateCopyOp]) -> None:
+        """Execute all StateCopyOps of one step phase. Ops are grouped by KV
+        type and each group runs as ONE device dispatch (gather over src
+        exec ids, scatter over dst exec ids) instead of one jit call per op.
+        Within a phase all sources are read before any destination is
+        written, which matches sequential execution because a phase never
+        copies out of a page it also copies into."""
+        if not ops:
+            return
+        by_type: Dict[str, List[StateCopyOp]] = {}
+        for op in ops:
+            by_type.setdefault(op.type_name, []).append(op)
+        total = self.buffer.shape[-1]
+        for name, group in by_type.items():
+            size = self.specs[name].page_units
+            if total % size:            # misaligned pool: per-op fallback
+                for op in group:
+                    self.copy_page(name, op.src_page, op.dst_page)
+                continue
+            cap = _pow2(len(group))
+            srcs = np.zeros((cap,), np.int32)
+            dsts = np.full((cap,), total // size, np.int32)   # pad -> OOB drop
+            for i, op in enumerate(group):
+                srcs[i] = op.src_page
+                dsts[i] = op.dst_page
+            fn = self._batch_copy_fns.get((size, cap))
+            if fn is None:
+                def cp(buf, srcs, dsts, size_s):
+                    rows = buf.reshape(-1, size_s)
+                    blk = jnp.take(rows, srcs, axis=0)
+                    rows = rows.at[dsts].set(blk, mode="drop",
+                                             unique_indices=False)
+                    return rows.reshape(buf.shape)
+                fn = jax.jit(cp, static_argnums=(3,), donate_argnums=(0,))
+                self._batch_copy_fns[(size, cap)] = fn
+            self.buffer = fn(self.buffer, jnp.asarray(srcs),
+                             jnp.asarray(dsts), size)
+
+    def zero_pages(self, pages: Sequence[Tuple[str, int]]) -> None:
+        """Zero freshly allocated pages (one batched dispatch per type):
+        recycled large pages carry other types' stale bytes, which can
+        decode as NaN when gathered as K/V — and NaN survives even fully
+        masked softmax accumulation."""
+        if not pages:
+            return
+        by_type: Dict[str, List[int]] = {}
+        for name, eid in pages:
+            by_type.setdefault(name, []).append(eid)
+        total = self.buffer.shape[-1]
+        for name, eids in by_type.items():
+            # manager spec table, not self.specs: with several models
+            # sharing one pool (spec decode) a drain can surface pages of
+            # types this runner's model does not own
+            size = self.mgr.spec(name).page_units
+            if total % size:
+                for eid in eids:
+                    self.zero_page(name, eid)
+                continue
+            cap = _pow2(len(eids))
+            dsts = np.full((cap,), total // size, np.int32)  # pad: OOB drop
+            dsts[:len(eids)] = eids
+            fn = self._batch_zero_fns.get((size, cap))
+            if fn is None:
+                def z(buf, dsts, size_s, cap_s):
+                    rows = buf.reshape(-1, size_s)
+                    zero = jnp.zeros((cap_s, size_s), buf.dtype)
+                    rows = rows.at[dsts].set(zero, mode="drop",
+                                             unique_indices=False)
+                    return rows.reshape(buf.shape)
+                fn = jax.jit(z, static_argnums=(2, 3), donate_argnums=(0,))
+                self._batch_zero_fns[(size, cap)] = fn
+            self.buffer = fn(self.buffer, jnp.asarray(dsts), size, cap)
+
+    def zero_page(self, type_name: str, eid: int) -> None:
+        """Zero one small page (fresh recurrent-state initialisation)."""
+        size = self.specs[type_name].page_units
+        if self._zero_fn is None:
+            def z(buf, off, size_s):
+                flat = buf.reshape(-1)
+                flat = jax.lax.dynamic_update_slice(
+                    flat, jnp.zeros((size_s,), flat.dtype), (off,))
+                return flat.reshape(buf.shape)
+            self._zero_fn = jax.jit(z, static_argnums=(2,),
+                                    donate_argnums=(0,))
+        self.buffer = self._zero_fn(self.buffer, jnp.int32(eid * size), size)
+
     def copy_page(self, type_name: str, src: int, dst: int) -> None:
         """Device copy of one whole small page (state checkpoint/restore)."""
         spec = self.specs[type_name]

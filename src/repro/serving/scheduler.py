@@ -1,5 +1,25 @@
-"""Continuous-batching scheduler with chunked prefill and recompute
-preemption, integrated with the Jenga manager (begin/allocate/preempt)."""
+"""Token-budget continuous-batching scheduler (vLLM-style, Kwon et al.
+2023) on top of the Jenga manager.
+
+``schedule()`` packs ONE mixed plan per engine step: every decode-phase
+request contributes one token and as many concurrent prefill chunks as fit
+the remaining per-step token budget (``max_num_batched_tokens``) ride along
+in the same plan. The engine executes the whole plan as a single device
+dispatch, which is how the batch capacity the Jenga allocator frees is
+converted into tokens/step (paper §7, Fig. 13-15).
+
+Allocation for the plan is batch-transactional: the manager's
+``allocate_for_batch`` commits page capacity for every scheduled request or
+rolls the step back as one unit (the §5.4 property lifted to the plan
+level). On failure the scheduler preempts the latest-arrival running
+request (vLLM recompute preemption) — preferring victims outside the plan,
+then shrinking the plan itself — and retries.
+
+``serial=True`` reproduces the legacy one-prefill-chunk-per-step schedule
+(no token budget, decodes unbudgeted); the engine then issues prefill and
+decode as separate dispatches. It exists for A/B step-count comparisons and
+for the mixed-vs-serial determinism tests.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -13,16 +33,46 @@ from .request import Request, Status
 @dataclasses.dataclass
 class SchedulerConfig:
     max_running: int = 16
-    chunk_size: int = 64            # chunked-prefill token budget per step
+    chunk_size: int = 64            # serial-mode prefill chunk size
+    max_num_batched_tokens: int = 256   # per-step mixed-batch token budget
     max_preemptions: int = 100
+    serial: bool = False            # legacy one-prefill-per-step schedule
+
+
+@dataclasses.dataclass
+class ScheduledSeq:
+    """One request's share of a step: compute ``num_tokens`` tokens starting
+    at ``req.seq.num_computed`` (1 for decodes, a chunk for prefills).
+    ``is_prefill`` is snapshotted at schedule time (advancing the sequence
+    flips ``req.in_prefill`` before step metrics are read)."""
+    req: Request
+    num_tokens: int
+    is_prefill: bool = False
 
 
 @dataclasses.dataclass
 class StepPlan:
-    prefill: Optional[Request]          # one prefill chunk this step
-    prefill_tokens: int
-    decodes: List[Request]              # requests decoding one token each
+    """Flattened mixed batch for one engine step: decodes first, then
+    prefill chunks, all dispatched together (or in two groups under the
+    serial compat schedule)."""
+    scheduled: List[ScheduledSeq]
     copy_ops: List[StepCopy] = dataclasses.field(default_factory=list)
+
+    @property
+    def decodes(self) -> List[Request]:
+        return [s.req for s in self.scheduled if not s.is_prefill]
+
+    @property
+    def prefills(self) -> List[ScheduledSeq]:
+        return [s for s in self.scheduled if s.is_prefill]
+
+    @property
+    def prefill_tokens(self) -> int:
+        return sum(s.num_tokens for s in self.scheduled if s.is_prefill)
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(s.num_tokens for s in self.scheduled)
 
 
 StepCopy = StateCopyOp
@@ -44,65 +94,112 @@ class Scheduler:
 
     # ------------------------------------------------------------ schedule
     def schedule(self) -> StepPlan:
-        copy_ops: List[StateCopyOp] = []
-        # 1) admit new requests while capacity allows
-        while (self.waiting and len(self.running) < self.cfg.max_running):
+        # 1) admit new requests while capacity allows; begin_request acquires
+        #    prefix-cache hits and may emit state-restore copy ops.
+        admit_ops: List[Tuple[Request, StateCopyOp]] = []
+        while self.waiting and len(self.running) < self.cfg.max_running:
             req = self.waiting[0]
             if req.seq is None or req.seq.num_computed == 0:
                 seq = req.make_seq() if req.seq is None else req.seq
                 ok, ops = self.mgr.begin_request(seq)
                 if not ok:
                     break
-                copy_ops.extend(ops)
+                admit_ops.extend((req, op) for op in ops)
             self.waiting.popleft()
             req.status = Status.RUNNING
             self.running.append(req)
 
-        # 2) pick one prefill chunk (FIFO among running prefills)
-        plan_prefill = None
-        prefill_tokens = 0
+        # 2) pack candidates under the token budget: decodes first (they are
+        #    latency-critical and cheap), then prefill chunks FIFO.
+        budget = self.cfg.max_num_batched_tokens
+        cands: List[ScheduledSeq] = []
         for req in self.running:
             if req.in_prefill:
-                seq = req.seq
-                target = min(len(req.prompt),
-                             seq.num_computed + self.cfg.chunk_size)
-                while not self.mgr.allocate_for_tokens(seq, target):
-                    victim = self._pick_victim(exclude=req)
-                    if victim is None:
-                        target = 0
-                        break
-                    self._preempt(victim)
-                if target > seq.num_computed:
-                    plan_prefill = req
-                    prefill_tokens = target - seq.num_computed
-                break
-
-        # 3) all decode-phase requests step one token
-        decodes = []
-        for req in list(self.running):
-            if req.in_prefill or req is plan_prefill:
                 continue
-            seq = req.seq
-            while not self.mgr.allocate_for_tokens(seq, seq.num_tokens):
-                victim = self._pick_victim(exclude=req)
-                if victim is None or victim is req:
-                    victim = req          # self-preempt as last resort
-                self._preempt(victim)
-                if victim is req:
-                    seq = None
+            if not self.cfg.serial and budget <= 0:
+                break               # budget exhausted; rest run next step
+            cands.append(ScheduledSeq(req, 1, is_prefill=False))
+            budget -= 1
+        # Prefill packing is DEPTH-first: the oldest prefill takes as much
+        # of the remaining budget as its prompt needs, then the next, ...
+        # (one request reaches decode quickly and frees its slack instead
+        # of every request holding a memory-hungry partial prefill). The
+        # per-request ``chunk_size`` cap only applies to the serial compat
+        # schedule; in mixed mode the budget IS the chunking control.
+        n_prefills = 0
+        for req in self.running:
+            if not req.in_prefill:
+                continue
+            if self.cfg.serial and n_prefills >= 1:
+                break
+            cap = self.cfg.chunk_size if self.cfg.serial else budget
+            chunk = min(cap, len(req.prompt) - req.seq.num_computed)
+            if chunk <= 0:
+                break               # out of budget; later prefills wait
+            cands.append(ScheduledSeq(req, chunk, is_prefill=True))
+            budget -= chunk
+            n_prefills += 1
+
+        # 3) batch-transactional allocation: retry until the WHOLE plan
+        #    commits as one unit. On failure, first DEFER prefill chunks
+        #    (drop from this step's plan, keep their pages — no progress is
+        #    lost), then fall back to recompute preemption of the
+        #    latest-arrival running request so the oldest request always
+        #    makes progress (no livelock under memory pressure).
+        while cands:
+            seqs = [c.req.seq for c in cands]
+            targets = [c.req.seq.num_computed + c.num_tokens for c in cands]
+            if self.mgr.allocate_for_batch(seqs, targets):
+                break
+            prefills = [c for c in cands if c.is_prefill]
+            if prefills:
+                cands.remove(self._latest(prefills, key=lambda c: c.req))
+                continue
+            keep = min(cands, key=lambda c: c.req.arrival).req
+            victims = [r for r in self.running if r is not keep]
+            if not victims:
+                self._preempt(keep)     # a single request cannot fit at all
+                cands = []
+                break
+            self._preempt(self._latest(victims))
+            cands = [c for c in cands if c.req.status == Status.RUNNING]
+
+        # 4) progress guarantee: if every candidate was deferred (all
+        #    running requests hold pages but none can grow), the oldest
+        #    request gets its tokens by recompute-preempting latest-arrival
+        #    victims — otherwise mid-prefill requests deadlock the pool.
+        if not cands and self.running:
+            head = min(self.running, key=lambda r: r.arrival)
+            cap = (self.cfg.chunk_size if self.cfg.serial
+                   else self.cfg.max_num_batched_tokens)
+            nt = (min(cap, len(head.prompt) - head.seq.num_computed)
+                  if head.in_prefill else 1)
+            while not self.mgr.allocate_for_tokens(
+                    head.seq, head.seq.num_computed + nt):
+                victims = [r for r in self.running if r is not head]
+                if not victims:
+                    self._preempt(head)   # a lone request that cannot fit
                     break
-            if seq is not None:
-                decodes.append(req)
-        return StepPlan(prefill=plan_prefill, prefill_tokens=prefill_tokens,
-                        decodes=decodes, copy_ops=copy_ops)
+                self._preempt(self._latest(victims))
+            else:
+                cands = [ScheduledSeq(head, nt, is_prefill=head.in_prefill)]
+
+        # restore ops of admissions that got preempted again in step 3 must
+        # not run (their destination pages are already freed)
+        copy_ops = [op for req, op in admit_ops
+                    if req.status == Status.RUNNING]
+        return StepPlan(scheduled=cands, copy_ops=copy_ops)
 
     # ------------------------------------------------------------ preempt
-    def _pick_victim(self, exclude: Request) -> Optional[Request]:
-        """Latest-arrival running request (vLLM recompute preemption)."""
-        cands = [r for r in self.running if r is not exclude]
-        if not cands:
-            return None
-        return max(cands, key=lambda r: r.arrival)
+    def _latest(self, items, key=lambda x: x):
+        """Latest-ARRIVAL element; ties break toward the latest-ADMITTED
+        (highest index in ``running``). Bare ``max`` would return the first
+        maximal element — the oldest, most-progressed request — inverting
+        the recompute-preemption policy whenever arrivals tie (every batch
+        submitted before stepping shares one arrival stamp)."""
+        order = {id(r): i for i, r in enumerate(self.running)}
+        return max(items, key=lambda it: (key(it).arrival,
+                                          order.get(id(key(it)), -1)))
 
     def _preempt(self, req: Request) -> None:
         self.mgr.preempt_request(req.seq)

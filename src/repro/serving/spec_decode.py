@@ -57,25 +57,26 @@ class SpecDecodeEngine:
         self.accept_lengths: List[int] = []
 
     def _shared_buffer(self):
-        # both runners must see the same device buffer object; wrap run()
+        # both runners must see the same device buffer object; wrap the
+        # plan-based dispatch so each call picks up the other's buffer
         t, d = self.t_runner, self.d_runner
 
         class _Shared:
             buffer = t.buffer
         self._buf = _Shared
 
-        def make_run(runner, params_attr):
-            orig = runner.run
+        def make_run(runner):
+            orig = runner.run_plan
 
-            def run(params, reqs, **kw):
+            def run_plan(params, items):
                 runner.buffer = self._buf.buffer
-                out = orig(params, reqs, **kw)
+                out = orig(params, items)
                 self._buf.buffer = runner.buffer
                 return out
-            return run
+            return run_plan
 
-        t.run_shared = make_run(t, "tp")
-        d.run_shared = make_run(d, "dp")
+        t.run_plan_shared = make_run(t)
+        d.run_plan_shared = make_run(d)
 
     # ------------------------------------------------------------ generate
     def generate(self, prompt: List[int], max_new_tokens: int = 16,
@@ -99,8 +100,7 @@ class SpecDecodeEngine:
                         len(prompt) - seq.num_computed)
                 assert self.mgr.allocate_for_tokens(
                     seq, seq.num_computed + n)
-                logits = runner.run_shared(params, [req], prefill=True,
-                                           chunk=n)
+                logits = runner.run_plan_shared(params, [(req, n)])
                 self.mgr.advance(seq, n)
             if seq is tseq:
                 t_last = logits
@@ -114,8 +114,7 @@ class SpecDecodeEngine:
             proposals = []
             for _ in range(k):
                 assert self.mgr.allocate_for_tokens(dseq, dseq.num_tokens)
-                logits = self.d_runner.run_shared(self.dp, [dreq],
-                                                  prefill=False)
+                logits = self.d_runner.run_plan_shared(self.dp, [(dreq, 1)])
                 self.mgr.advance(dseq, 1)
                 tok = int(np.argmax(logits[0][: self.dm.cfg.vocab_size]))
                 proposals.append(tok)
@@ -150,7 +149,7 @@ class SpecDecodeEngine:
         logits_all = np.zeros((t, self.t_runner.model.v_pad), np.float32)
         saved = seq.num_computed
         for j in range(t):
-            lg = self.t_runner.run_shared(self.tp, [treq], prefill=False)
+            lg = self.t_runner.run_plan_shared(self.tp, [(treq, 1)])
             logits_all[j] = lg[0]
             seq.num_computed += 1
         seq.num_computed = saved

@@ -1,5 +1,9 @@
 """Paged decode attention kernel vs pure-jnp oracle: shape/dtype sweeps +
 hypothesis property (page permutation invariance)."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

@@ -8,6 +8,10 @@ Invariants checked after every operation of a random serving trace:
   * freeing everything returns the pool to pristine state;
   * total allocated units never exceed the physical budget.
 """
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

@@ -19,7 +19,7 @@ ARCH_SET = ("h2o-danube-3-4b", "zamba2-1.2b", "granite-3-2b")
 
 
 def run_engine(arch: str, mode: str, n_req=6, prompt=192, out=8,
-               pool=None, batching: str = "mixed"):
+               pool=None, batching: str = "packed"):
     cfg = reduced(ARCHS[arch])
     model = build_model(cfg, single_device_dist())
     if pool is None:
@@ -59,16 +59,43 @@ def run_engine(arch: str, mode: str, n_req=6, prompt=192, out=8,
                 preemptions=eng.scheduler.preemption_count)
 
 
+def run_waste_ab(arch: str, batching: str, n_req=16, prompt=96, out=24,
+                 budget=128):
+    """Decode-heavy mixed workload for the padding-waste A/B: requests
+    arrive staggered so most steps co-schedule one prefill chunk with a
+    growing decode batch — exactly the regime where the padded layout's
+    decode rows pay the prefill chunk's (B, T) padding."""
+    cfg = reduced(ARCHS[arch])
+    model = build_model(cfg, single_device_dist())
+    eng = Engine(model, EngineConfig(
+        kv_pool_bytes=96 << 20, max_running=n_req, chunk_size=32,
+        memory_mode="jenga", batching_mode=batching,
+        max_num_batched_tokens=budget, enable_prefix_caching=False))
+    for i in range(n_req):
+        eng.submit(Request(rid=f"r{i}", prompt=[(7 * i + j) % 101
+                                                for j in range(prompt)],
+                           sampling=SamplingParams(max_new_tokens=out)))
+        eng.step()          # staggered arrivals: prefills ride with decodes
+    eng.run_until_done(max_steps=4000)
+    r = eng.runner
+    waste = 1.0 - r.tokens_dispatched / max(1, r.slots_dispatched)
+    return dict(waste=waste,
+                tok_per_dispatch=r.tokens_dispatched / max(1, r.dispatch_count),
+                slots=r.slots_dispatched, tokens=r.tokens_dispatched,
+                finished=len(eng.finished))
+
+
 def main(report=print):
     for arch in ARCH_SET:
         rows = {}
         # memory-mode A/B (paper Fig. 13/14) + batching-mode A/B: the
-        # token-budget mixed engine vs the legacy one-prefill-per-step
-        # schedule, identical pool budget (the continuous-batching win).
+        # token-packed engine vs the PR-1 padded layout vs the legacy
+        # one-prefill-per-step schedule, identical pool budget.
         for tag, mode, batching in (
-                ("jenga", "jenga", "mixed"),
+                ("jenga", "jenga", "packed"),
+                ("jenga-padded", "jenga", "padded"),
                 ("jenga-serial", "jenga", "serial"),
-                ("paged-baseline", "paged-baseline", "mixed")):
+                ("paged-baseline", "paged-baseline", "packed")):
             r = run_engine(arch, mode, batching=batching)
             rows[tag] = r
             report(f"e2e_{arch}_{tag},{r['wall_s']*1e6/max(1,r['steps']):.0f},"
@@ -78,6 +105,16 @@ def main(report=print):
         report(f"e2e_{arch}_speedup,0,steps_ratio={sp:.2f}x")
         sb = rows["jenga-serial"]["steps"] / max(1, rows["jenga"]["steps"])
         report(f"e2e_{arch}_batching_speedup,0,steps_ratio={sb:.2f}x")
+    # padding-waste A/B (the token-packed dispatch win): pad slots per
+    # dispatched slot and tokens per dispatch, padded vs packed layout on
+    # a decode-heavy mixed workload.
+    for batching in ("padded", "packed"):
+        r = run_waste_ab("granite-3-2b", batching)
+        report(f"dispatch_waste_{batching},0,"
+               f"waste={100 * r['waste']:.1f}% "
+               f"tok/dispatch={r['tok_per_dispatch']:.1f} "
+               f"slots={r['slots']} tokens={r['tokens']} "
+               f"finished={r['finished']}")
 
 
 if __name__ == "__main__":

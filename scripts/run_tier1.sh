@@ -4,5 +4,34 @@
 # regressions are visible per PR.
 set -u
 cd "$(dirname "$0")/.."
+
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# Fail loudly if something still shadows src/ under the EXACT path the run
+# uses: `repro` is a NAMESPACE package, so a stale REGULAR `repro` package
+# (with __init__.py) anywhere on PYTHONPATH or in site-packages beats it
+# even though src/ is prepended — the suite would silently test the WRONG
+# code.
+shadow="$(python - <<'EOF'
+import os
+import importlib.util
+spec = importlib.util.find_spec("repro")
+if spec is None:
+    print("")
+elif spec.origin:                       # regular package: .../__init__.py
+    print(os.path.dirname(spec.origin))
+else:                                   # namespace package: first location wins
+    print(next(iter(spec.submodule_search_locations), ""))
+EOF
+)"
+expected="$(pwd)/src/repro"
+if [ "$shadow" != "$expected" ]; then
+  echo "error: PYTHONPATH shadows src/: 'repro' resolves to" >&2
+  echo "  ${shadow:-<nothing>}" >&2
+  echo "instead of" >&2
+  echo "  $expected" >&2
+  echo "unset PYTHONPATH (or remove the stale entry) and re-run." >&2
+  exit 1
+fi
+
 exec python -m pytest -q "$@"

@@ -61,6 +61,116 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
                     jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
 
 
+def _varlen_kernel(q_ref, k_ref, v_ref, qseg_ref, kseg_ref, qpos_ref,
+                   kpos_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, blk_q: int, blk_k: int, window: int):
+    """Segment-id variant: the batch is ONE packed token stream; the causal
+    structure is block-diagonal over segments (q attends k iff
+    kseg == qseg and kpos <= qpos). Pad q tokens carry seg -1, pad k slots
+    seg -2, so pads never match anything."""
+    ki = pl.program_id(2)
+    n_k = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                    # (blk_q, D)
+    k = k_ref[0].astype(jnp.float32)                    # (blk_k, D)
+    v = v_ref[0].astype(jnp.float32)
+    d = q.shape[-1]
+    logit = (q * (1.0 / d ** 0.5)) @ k.T                # (blk_q, blk_k)
+
+    q_seg = qseg_ref[0][:, None]                        # (blk_q, 1)
+    k_seg = kseg_ref[0][None, :]                        # (1, blk_k)
+    q_pos = qpos_ref[0][:, None]
+    k_pos = kpos_ref[0][None, :]
+    mask = (k_seg == q_seg) & (k_pos <= q_pos)
+    if window:
+        mask &= k_pos > q_pos - window
+    logit = jnp.where(mask, logit, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logit, axis=-1))
+    # fully-masked block rows contribute NOTHING (p would otherwise
+    # degenerate to exp(NEG_INF - NEG_INF) = 1 per slot — a uniform
+    # average leaking other segments' values into no-slot rows)
+    p = jnp.where((m_new > NEG_INF / 2)[:, None],
+                  jnp.exp(logit - m_new[:, None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _final():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_varlen_tpu(q, k, v, q_seg, kv_seg, q_pos, kv_pos, *,
+                               window=0, blk_q=128, blk_k=128,
+                               interpret=True):
+    """Varlen (token-packed) flash attention: the T axis is one packed
+    stream of concatenated segments, not one sequence.
+
+    q: (BH, T, D); k/v: (BH, S, D); q_seg/q_pos: (T,); kv_seg/kv_pos: (S,)
+    — segment ids and absolute in-sequence positions shared across the BH
+    heads. Streams are padded up to block multiples internally (pad q rows
+    seg -1, pad kv slots seg -2), so any ``_tok_bucket``-sized packed
+    stream is accepted. Returns (BH, T, D); rows whose segment matches no
+    kv slot (pad rows included) come out exactly zero."""
+    bh, t, d = q.shape
+    s = k.shape[1]
+    t0 = t
+    blk_q = min(blk_q, t)
+    blk_k = min(blk_k, s)
+    pad_t = -t % blk_q
+    pad_s = -s % blk_k
+    if pad_t:
+        q = jnp.pad(q, ((0, 0), (0, pad_t), (0, 0)))
+        q_seg = jnp.pad(q_seg, (0, pad_t), constant_values=-1)
+        q_pos = jnp.pad(q_pos, (0, pad_t))
+        t += pad_t
+    if pad_s:
+        k = jnp.pad(k, ((0, 0), (0, pad_s), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_s), (0, 0)))
+        kv_seg = jnp.pad(kv_seg, (0, pad_s), constant_values=-2)
+        kv_pos = jnp.pad(kv_pos, (0, pad_s))
+        s += pad_s
+    grid = (bh, t // blk_q, s // blk_k)
+    kernel = functools.partial(_varlen_kernel, blk_q=blk_q, blk_k=blk_k,
+                               window=window)
+    # metadata rides as (1, T) 2-D arrays: TPU lowering dislikes rank-1 refs
+    meta = [a.reshape(1, -1).astype(jnp.int32)
+            for a in (q_seg, kv_seg, q_pos, kv_pos)]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_q, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, blk_k, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, blk_k, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, blk_q), lambda b, qi, ki: (0, qi)),
+            pl.BlockSpec((1, blk_k), lambda b, qi, ki: (0, ki)),
+            pl.BlockSpec((1, blk_q), lambda b, qi, ki: (0, qi)),
+            pl.BlockSpec((1, blk_k), lambda b, qi, ki: (0, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, d), lambda b, qi, ki: (b, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q, d), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((bh, t, d), q.dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(q, k, v, *meta)[:, :t0]
+
+
 def flash_attention_tpu(q, k, v, *, causal=True, window=0,
                         blk_q=128, blk_k=128, interpret=True):
     """q: (BH, T, D); k/v: (BH, S, D). Returns (BH, T, D)."""

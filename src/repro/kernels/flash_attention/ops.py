@@ -1,10 +1,10 @@
-"""Jitted wrapper for the flash attention kernel."""
+"""Jitted wrappers for the flash attention kernels."""
 from functools import partial
 
 import jax
 
-from .kernel import flash_attention_tpu
-from .ref import flash_attention_ref
+from .kernel import flash_attention_tpu, flash_attention_varlen_tpu
+from .ref import flash_attention_ref, flash_attention_varlen_ref
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "use_kernel"))
@@ -14,3 +14,16 @@ def flash(q, k, v, *, causal=True, window=0, use_kernel=True):
             q, k, v, causal=causal, window=window,
             interpret=jax.default_backend() != "tpu")
     return flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+@partial(jax.jit, static_argnames=("window", "use_kernel"))
+def flash_varlen(q, k, v, q_seg, kv_seg, q_pos, kv_pos, *, window=0,
+                 use_kernel=True):
+    """Token-packed (segment-id) flash attention — the kernel schedule the
+    packed serving layout maps onto for real TPU dispatch."""
+    if use_kernel:
+        return flash_attention_varlen_tpu(
+            q, k, v, q_seg, kv_seg, q_pos, kv_pos, window=window,
+            interpret=jax.default_backend() != "tpu")
+    return flash_attention_varlen_ref(q, k, v, q_seg, kv_seg, q_pos, kv_pos,
+                                      window=window)

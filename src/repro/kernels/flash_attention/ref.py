@@ -4,6 +4,26 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
+def flash_attention_varlen_ref(q, k, v, q_seg, kv_seg, q_pos, kv_pos, *,
+                               window=0):
+    """Masked-softmax oracle for the varlen (token-packed) kernel: the T
+    axis holds concatenated segments; q attends k iff same segment and
+    kv_pos <= q_pos (window-bounded when window > 0)."""
+    mask = (kv_seg[None, :] == q_seg[:, None]) & \
+        (kv_pos[None, :] <= q_pos[:, None])
+    if window:
+        mask &= kv_pos[None, :] > q_pos[:, None] - window
+    d = q.shape[-1]
+    logit = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32),
+                       k.astype(jnp.float32)) / (d ** 0.5)
+    logit = jnp.where(mask[None], logit, NEG_INF)
+    p = jnp.exp(logit - logit.max(-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    # rows with no valid slot are exactly zero (kernel contract)
+    p = p * mask.any(-1, keepdims=True)[None]
+    return jnp.einsum("bts,bsd->btd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=0):
     bh, t, d = q.shape
     s = k.shape[1]

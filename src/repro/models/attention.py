@@ -23,6 +23,31 @@ def group_q(q, kv_local: int):
     return q.reshape(b, t, kv_local, ql // kv_local, d)
 
 
+def segment_mask(q_seg, q_pos, kv_seg, kv_pos, *, window=0, chunk_start=None):
+    """Attention mask for a PACKED token stream: several independent
+    segments (sequences) share one batch row, identified by per-token /
+    per-slot segment ids. Token i may attend slot j iff both belong to the
+    same segment and j is not in i's future.
+
+    q_seg: (B, T); kv_seg: (B, S); q_pos: (B, T); kv_pos: (B, S) — absolute
+    positions within each token's own sequence. Padded q tokens carry seg id
+    -1 and padded kv slots -2, so pads never match anything (including each
+    other). chunk_start: (B, T) per-token start position of the token's
+    current chunk — when given, slots are valid iff kv_pos < chunk_start
+    (strictly before the chunk: the chunk's own slots come via the fresh-KV
+    path); when None the in-chunk causal rule kv_pos <= q_pos applies.
+    window > 0 adds the sliding-window bound kv_pos > q_pos - window.
+    Returns (B, T, S) bool."""
+    mask = q_seg[:, :, None] == kv_seg[:, None, :]
+    if chunk_start is not None:
+        mask &= kv_pos[:, None, :] < chunk_start[:, :, None]
+    else:
+        mask &= kv_pos[:, None, :] <= q_pos[:, :, None]
+    if window:
+        mask &= kv_pos[:, None, :] > q_pos[:, :, None] - window
+    return mask
+
+
 # --------------------------------------------------------------------- flash
 def flash_attention_partials(
     q, k, v, *, causal: bool = True, window: int = 0,

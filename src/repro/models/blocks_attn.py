@@ -71,43 +71,61 @@ def attn_train(p, x, dist: Dist, *, kv_local, head_dim, window=0,
     return x + psum_tp(y, dist)
 
 
-def attn_gather(buf, view_shape, tables, page_pos, layer):
+def attn_gather(buf, view_shape, tables, page_pos, layer, page_seg=None):
     """Phase 1 (READ): gather this layer's old pages + absolute positions.
     Must run before any buffer write in the same scan iteration (in-place
-    aliasing: see EXPERIMENTS.md 'buffer-copy' study)."""
+    aliasing: see EXPERIMENTS.md 'buffer-copy' study).
+
+    page_seg: (B, P) owning-segment id per page for PACKED layouts (all
+    segments' pages share one flat table row); None for the padded
+    row-per-sequence layout. Returns (k, v, slot_pos, slot_seg) with
+    slot_seg None when page_seg is None."""
     view = buf.reshape(view_shape)
     k_all, v_all = A.gather_pages(view, tables, layer)
-    b = tables.shape[0]
+    b, p = tables.shape
     tpp = view_shape[3]
     s = k_all.shape[1]
     slot_pos = (page_pos[:, :, None] + jnp.arange(tpp)[None, None, :]
                 ).reshape(b, s)
-    return k_all, v_all, slot_pos
+    slot_seg = None
+    if page_seg is not None:
+        slot_seg = jnp.broadcast_to(page_seg[:, :, None],
+                                    (b, p, tpp)).reshape(b, s)
+    return k_all, v_all, slot_pos, slot_seg
 
 
 def attn_compute(p, x, gathered, dist: Dist, *, kv_local, head_dim,
                  positions, seq_lens, window=0, rope_theta=1e6,
                  mrope_positions=None, norm_eps=1e-5, prefill=False,
-                 sp_axis: Optional[str] = None, kv_groups=None):
+                 sp_axis: Optional[str] = None, kv_groups=None,
+                 seg_ids=None, chunk_start=None):
     """Phase 2 (COMPUTE): attention over gathered old pages + this step's
     fresh K/V (still in registers — the buffer write happens in phase 3).
 
-    Old-page masking uses ``slot_pos < positions[:, :1]`` (strictly before
-    the chunk start): the chunk's own slots are not yet written. The fresh
-    part is intra-chunk causal attention merged via partial-softmax, after
-    the old part was combined across KV-replica groups / SP shards (the
-    fresh part is replicated on all shards, so it merges locally exactly
-    once). Returns (x_out, k_fresh, v_fresh)."""
-    k_all, v_all, slot_pos = gathered
+    Old-page masking uses ``slot_pos < chunk_start`` (strictly before the
+    chunk start): the chunk's own slots are not yet written. The fresh part
+    is intra-chunk causal attention merged via partial-softmax, after the
+    old part was combined across KV-replica groups / SP shards (the fresh
+    part is replicated on all shards, so it merges locally exactly once).
+
+    PACKED layout: ``seg_ids`` (B, T) carries per-token segment ids and
+    ``chunk_start`` (B, T) each token's chunk-start position (several
+    sequences share one stream row); both masks then additionally require
+    segment equality, using the slot_seg returned by ``attn_gather``.
+    Returns (x_out, k_fresh, v_fresh)."""
+    k_all, v_all, slot_pos, slot_seg = gathered
     b, t, _ = x.shape
     xn = rms_norm(x, p["attn_norm"], norm_eps)
     q, k, v = qkv_proj(p, xn, kv_local=kv_local, head_dim=head_dim,
                        positions=positions, rope_theta=rope_theta,
                        mrope_positions=mrope_positions)
-    chunk_start = positions[:, :1]                             # (B, 1)
-    if prefill:
+    packed = seg_ids is not None
+    if chunk_start is None:
+        chunk_start = positions[:, :1]                         # (B, 1)
+    if prefill or packed:
         o, m, l = _prefill_flash(q, k_all, v_all, slot_pos, positions,
-                                 chunk_start=chunk_start, window=window)
+                                 chunk_start=chunk_start, window=window,
+                                 q_seg=seg_ids, kv_seg=slot_seg)
     else:
         mask = slot_pos[:, None, :] < chunk_start[:, :, None]  # strict
         if window:
@@ -117,8 +135,13 @@ def attn_compute(p, x, gathered, dist: Dist, *, kv_local, head_dim,
         o, m, l = A.combine_partials(o, m, l, dist.tp_axis, groups=kv_groups)
     if sp_axis is not None:
         o, m, l = A.combine_partials(o, m, l, sp_axis)
-    # fresh (intra-chunk) part: causal within the chunk
-    if t == 1:
+    # fresh (intra-chunk) part: causal within the chunk (and within the
+    # token's own segment, for packed streams)
+    if packed:
+        mask_f = A.segment_mask(seg_ids, positions, seg_ids, positions,
+                                window=window)
+        of, mf, lf = A.attend_tokens(q, k, v, mask_f)
+    elif t == 1:
         mask_f = jnp.ones((b, 1, 1), bool)
         of, mf, lf = A.attend_tokens(q, k, v, mask_f)
     elif t <= 256:
@@ -162,12 +185,15 @@ def attn_cached(p, x, buf, view_shape, dist: Dist, *, layer, kv_local,
 
 
 def _prefill_flash(q, k, v, slot_pos, q_pos, *, window, chunk_start=None,
-                   block=512):
+                   block=512, q_seg=None, kv_seg=None):
     """Flash attention over OLD pages for a prefill chunk.
     Returns un-normalized partials (acc, m, l) for cross-shard combining.
 
-    chunk_start: (B,1) — old slots are valid iff slot_pos < chunk_start
-    (the chunk itself attends via the fresh-KV path).
+    chunk_start: (B,1) per row — or (B,T) per token for PACKED streams —
+    old slots are valid iff slot_pos < chunk_start (the chunk itself
+    attends via the fresh-KV path). q_seg (B,T) / kv_seg (B,S): packed
+    segment ids; when given, the mask additionally requires
+    kv_seg == q_seg so no token reads another sequence's pages.
     q: (B,T,KVL,G,D); k/v: (B,S,KVL,D); slot_pos: (B,S); q_pos: (B,T)."""
     b, t, kvl, g, d = q.shape
     s = k.shape[1]
@@ -180,23 +206,33 @@ def _prefill_flash(q, k, v, slot_pos, q_pos, *, window, chunk_start=None,
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
         slot_pos = jnp.pad(slot_pos, ((0, 0), (0, pad)),
                            constant_values=jnp.iinfo(jnp.int32).max // 2)
+        if kv_seg is not None:
+            kv_seg = jnp.pad(kv_seg, ((0, 0), (0, pad)),
+                             constant_values=-2)
     kb = k.reshape(b, nblk, block, kvl, d)
     vb = v.reshape(b, nblk, block, kvl, d)
     pb = slot_pos.reshape(b, nblk, block)
+    sb = None if kv_seg is None else kv_seg.reshape(b, nblk, block)
 
     def body(carry, blk):
         m, l, acc = carry
-        kblk, vblk, pblk = blk
+        if sb is None:
+            kblk, vblk, pblk = blk
+            sblk = None
+        else:
+            kblk, vblk, pblk, sblk = blk
         logit = jnp.einsum("btkgd,bjkd->bkgtj", qf, kblk,
                            preferred_element_type=jnp.float32)
         if chunk_start is not None:
             mask = jnp.broadcast_to(
-                pblk[:, None, :] < chunk_start[:, :, None], 
+                pblk[:, None, :] < chunk_start[:, :, None],
                 (pblk.shape[0], q_pos.shape[1], pblk.shape[1]))
         else:
             mask = pblk[:, None, :] <= q_pos[:, :, None]       # (B,T,blk)
         if window:
             mask &= pblk[:, None, :] > q_pos[:, :, None] - window
+        if sblk is not None:
+            mask &= sblk[:, None, :] == q_seg[:, :, None]
         mask = mask[:, None, None]                             # (B,1,1,T,blk)
         logit = jnp.where(mask, logit, A.NEG_INF)
         m_new = jnp.maximum(m, jnp.max(logit, axis=-1))
@@ -211,10 +247,11 @@ def _prefill_flash(q, k, v, slot_pos, q_pos, *, window, chunk_start=None,
     m0 = jnp.full((b, kvl, g, t), A.NEG_INF, jnp.float32)
     l0 = jnp.zeros((b, kvl, g, t), jnp.float32)
     a0 = jnp.zeros((b, kvl, g, t, d), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(
-        body, (m0, l0, a0),
-        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0),
-         jnp.moveaxis(pb, 1, 0)))
+    xs = [jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0),
+          jnp.moveaxis(pb, 1, 0)]
+    if sb is not None:
+        xs.append(jnp.moveaxis(sb, 1, 0))
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), tuple(xs))
     return acc, m, l
 
 

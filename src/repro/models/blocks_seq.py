@@ -60,6 +60,60 @@ def _conv_state_at(xp, width: int, last_idx=None):
     return jnp.take_along_axis(xp, idx[..., None], axis=1)
 
 
+# ----------------------------------------------------- packed-stream helpers
+def _packed_causal_conv(xf, w, conv0, seg_ids, seg_start):
+    """Depthwise causal conv over a PACKED token stream. xf: (TT, C);
+    w: (W, C); conv0: (S, W-1, C) per-segment carry; seg_ids/seg_start:
+    (TT,) — segment id per token (-1 pad) and the stream index of the
+    token's segment's first token. Predecessors that fall before a
+    segment's first stream slot are read from that segment's carry, so
+    neighbouring segments never leak into each other."""
+    tt, _ = xf.shape
+    width = w.shape[0]
+    idx = jnp.arange(tt)
+    segc = jnp.maximum(seg_ids, 0)
+    out = xf * w[width - 1][None]
+    for k in range(1, width):
+        shifted = xf[jnp.maximum(idx - k, 0)]
+        off = idx - seg_start                        # in-segment offset
+        ci = jnp.clip(width - 1 + off - k, 0, width - 2)
+        carry = conv0[segc, ci].astype(xf.dtype)
+        out = out + w[width - 1 - k][None] * jnp.where(
+            (idx - k >= seg_start)[:, None], shifted, carry)
+    return out
+
+
+def _packed_conv_state(xf, conv0, seg_start, seg_last, width):
+    """Per-segment conv carry after each segment's last token: the last
+    ``width-1`` stream inputs of the segment, topped up from the incoming
+    carry when the segment is shorter than the window. xf: (TT, C);
+    conv0: (S, W-1, C); seg_start: (TT,); seg_last: (S,)."""
+    if width <= 1:
+        return conv0[:, :0]
+    tt = xf.shape[0]
+    last = jnp.clip(seg_last, 0, tt - 1)
+    start_seg = seg_start[last]                                 # (S,)
+    o_last = last - start_seg                                   # in-seg offset
+    offs = o_last[:, None] - (width - 2) + jnp.arange(width - 1)[None]
+    gidx = jnp.clip(start_seg[:, None] + offs, 0, tt - 1)       # (S, W-1)
+    from_x = xf[gidx].astype(conv0.dtype)
+    from_0 = jnp.take_along_axis(
+        conv0, jnp.clip(width - 1 + offs, 0, width - 2)[..., None], axis=1)
+    return jnp.where((offs >= 0)[..., None], from_x, from_0)
+
+
+def _packed_shift(xf, shift0, seg_ids, seg_start):
+    """Token-shift over a packed stream: x_prev[t] = x[t-1] within the
+    token's segment, or the segment's carried shift state at the segment's
+    first token. xf: (TT, d); shift0: (S, 1, d). Returns (1, TT, d)."""
+    tt = xf.shape[0]
+    idx = jnp.arange(tt)
+    segc = jnp.maximum(seg_ids, 0)
+    prev = xf[jnp.maximum(idx - 1, 0)]
+    carry = shift0[segc, 0].astype(xf.dtype)
+    return jnp.where((idx - 1 >= seg_start)[:, None], prev, carry)[None]
+
+
 def _mamba_project(p, x, md):
     """Shared projections for all modes. Returns z, xr, Bm, Cm, dt."""
     z = dense(x, p["w_z"])                                    # (B,T,d_in_local)
@@ -151,6 +205,110 @@ def mamba2_chunked(p, x, dist: Dist, md: dict, *, d_state: int, headdim: int,
     y = y + xr.reshape(b, t, hl, headdim).astype(jnp.float32) \
         * p["D"].astype(jnp.float32)[None, None, :, None]
     y = y.reshape(b, t, dil).astype(x.dtype)
+    y = rms_norm(y, p["out_norm"], norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = dense(y, p["w_out"])
+    out = psum_tp(out, dist)
+    state = flatten_mamba_state(S_fin, conv_state, md)
+    return x + out, state
+
+
+def mamba2_packed(p, x, dist: Dist, md: dict, *, d_state: int, headdim: int,
+                  conv_width: int, seg_ids, seg_start, seg_last, init_state,
+                  chunk: int = 128, norm_eps=1e-5):
+    """Mamba2 over a PACKED token stream: ``x`` is (1, TT, d) holding S
+    independent segments back to back (segment contiguity is the layout
+    invariant every reset below relies on). seg_ids (TT,): segment per
+    token (-1 pad); seg_start (TT,): stream index of the token's segment's
+    first token; seg_last (S,): stream index of each segment's last token;
+    init_state (S, units): per-segment entry state.
+
+    The chunked SSD scan carries ONE state per SEGMENT instead of one per
+    batch row: within a chunk, cross-segment score terms are masked by
+    segment equality, the inter-chunk state read decays by the cumulative
+    log-decay since the segment's first in-chunk token (cumsum differences
+    cancel other segments' decay because segments are contiguous), and the
+    per-segment state update only folds in that segment's tokens — so at
+    scan end ``states[i]`` is exactly the state after segment i's last
+    token (segments untouched by a chunk pass through unchanged, pads
+    contribute dt=0). Returns (y (1,TT,d), final_states (S, units));
+    outputs at pad slots are garbage and must be discarded by the caller."""
+    b, t, _ = x.shape
+    assert b == 1, "packed streams are single-row"
+    nseg = init_state.shape[0]
+    hl, dil = md["h_local"], md["d_in_local"]
+    xn = rms_norm(x, p["norm"], norm_eps)
+    z, xr, Bm, Cm, dt = _mamba_project(p, xn, md)
+    valid = (seg_ids >= 0)
+    dt = dt * valid[None, :, None].astype(dt.dtype)
+
+    ssm0, conv0 = split_mamba_state(init_state, md, d_state, headdim,
+                                    conv_width)                 # (S, ...)
+    raw = jnp.concatenate([xr, Bm, Cm], axis=-1)[0]             # (TT, C)
+    conv_out = _packed_causal_conv(raw, p["conv_w"], conv0, seg_ids,
+                                   seg_start)
+    conv_state = _packed_conv_state(raw, conv0, seg_start, seg_last,
+                                    conv_width)
+    xbc = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    # zero pad tokens so no pad garbage can reach any state/score term
+    # (0 * non-finite would poison the per-segment scatter-adds)
+    xbc = xbc * valid[:, None].astype(xbc.dtype)
+    xr_s = xbc[:, :dil]
+    Bm_s = xbc[:, dil:dil + d_state].astype(jnp.float32)
+    Cm_s = xbc[:, dil + d_state:].astype(jnp.float32)
+
+    nchunk = -(-t // chunk)
+    pad = nchunk * chunk - t
+    xh = jnp.pad(xr_s, ((0, pad), (0, 0))).reshape(
+        nchunk, chunk, hl, headdim)
+    Bc = jnp.pad(Bm_s, ((0, pad), (0, 0))).reshape(nchunk, chunk, d_state)
+    Cc = jnp.pad(Cm_s, ((0, pad), (0, 0))).reshape(nchunk, chunk, d_state)
+    dtc = jnp.pad(dt[0], ((0, pad), (0, 0))).reshape(nchunk, chunk, hl)
+    segc = jnp.pad(seg_ids, (0, pad), constant_values=-1).reshape(
+        nchunk, chunk)
+    a_log = -jnp.exp(p["A_log"].astype(jnp.float32))            # (H,) < 0
+
+    def chunk_step(S_seg, inp):
+        xck, bck, cck, dck, sk = inp
+        oneh = (sk[:, None] == jnp.arange(nseg)[None]).astype(jnp.float32)
+        ldec = dck * a_log[None]                                # (L,H) <= 0
+        cumL = jnp.cumsum(ldec, axis=0)                         # inclusive
+        cumL_ex = cumL - ldec
+        same = (sk[:, None] == sk[None, :]) & (sk >= 0)[:, None]
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool)) & same
+        # intra-chunk: cumsum differences only accumulate own-segment decay
+        # because cross-segment (t, s) pairs are masked and segments are
+        # contiguous within the chunk
+        cb = jnp.einsum("tn,sn->ts", cck, bck)
+        diff = cumL[:, None] - cumL[None]                       # (t,s,H)
+        dec = jnp.exp(jnp.where(mask[..., None], diff, -jnp.inf))
+        score = cb[..., None] * dec * dck[None]
+        y = jnp.einsum("tsh,shp->thp", score, xck.astype(jnp.float32))
+        # inter-chunk: each token reads ITS segment's carried state,
+        # decayed since the segment's first in-chunk token
+        big = jnp.where(oneh[..., None] > 0, cumL_ex[:, None], -jnp.inf)
+        base = jnp.max(big, axis=0)                             # (S,H)
+        base = jnp.where(jnp.isfinite(base), base, 0.0)         # absent segs
+        rfac = jnp.exp(cumL - base[jnp.maximum(sk, 0)])         # (L,H) <= 1
+        S_tok = S_seg[jnp.maximum(sk, 0)]                       # (L,H,P,N)
+        y = y + jnp.einsum("tn,thpn,th->thp", cck, S_tok, rfac)
+        # per-segment state update: decay by the segment's own in-chunk
+        # decay mass; scatter-add contributions by segment
+        seg_sum = jnp.einsum("ls,lh->sh", oneh, ldec)           # (S,H) <= 0
+        segend = jnp.min(jnp.where(oneh[..., None] > 0, cumL[:, None],
+                                   jnp.inf), axis=0)            # (S,H)
+        segend = jnp.where(jnp.isfinite(segend), segend, 0.0)
+        sfac = jnp.exp(segend[jnp.maximum(sk, 0)] - cumL) * dck  # (L,H)
+        S_add = jnp.einsum("ls,lh,lhp,ln->shpn", oneh, sfac,
+                           xck.astype(jnp.float32), bck)
+        S_new = S_seg * jnp.exp(seg_sum)[..., None, None] + S_add
+        return S_new, y
+
+    S_fin, ys = jax.lax.scan(chunk_step, ssm0, (xh, Bc, Cc, dtc, segc))
+    y = ys.reshape(nchunk * chunk, hl, headdim)[:t][None]
+    y = y + xr_s.reshape(1, t, hl, headdim).astype(jnp.float32) \
+        * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(1, t, dil).astype(x.dtype)
     y = rms_norm(y, p["out_norm"], norm_eps)
     y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
     out = dense(y, p["w_out"])
@@ -321,6 +479,91 @@ def rwkv6_chunked(p, x, dist: Dist, rd: dict, *, head_size: int,
         gather = lambda a: jnp.take_along_axis(
             a, last_idx[:, None, None].astype(jnp.int32), axis=1)
         att_out, cm_out = gather(xn), gather(xc)
+    state = flatten_rwkv_state(S_fin, att_out, cm_out, rd)
+    return x, state
+
+
+def rwkv6_packed(p, x, dist: Dist, rd: dict, *, head_size: int,
+                 seg_ids, seg_start, seg_last, init_state,
+                 chunk: int = 64, norm_eps=1e-5):
+    """RWKV6 over a PACKED token stream (see ``mamba2_packed`` for the
+    layout contract). The wkv chunked scan carries one state per SEGMENT
+    with segment-equality masking on the intra-chunk scores; token-shift
+    lerps read each segment's carried shift state at its first stream slot
+    instead of the previous segment's last token. Returns
+    (y (1,TT,d), final_states (S, units))."""
+    b, t, d = x.shape
+    assert b == 1, "packed streams are single-row"
+    nseg = init_state.shape[0]
+    hl = rd["h_local"]
+    S0, att_shift, cm_shift = split_rwkv_state(init_state, rd, head_size, d)
+    valid = (seg_ids >= 0)
+
+    # ---- time mix
+    xn = rms_norm(x, p["ln1"], norm_eps)
+    x_prev = _packed_shift(xn[0], att_shift, seg_ids, seg_start)
+    r, k, v, g, logw = _rwkv_proj(p, xn, x_prev, rd, head_size)
+    vmask = valid[None, :, None, None]
+    k = jnp.where(vmask, k, 0.0)          # pads: no state contribution
+    logw = jnp.where(vmask, logw, 0.0)    # pads: no decay
+    u = p["u"].astype(jnp.float32)                            # (H, hs)
+
+    nchunk = -(-t // chunk)
+    pad = nchunk * chunk - t
+    padt = lambda a: jnp.pad(a[0], ((0, pad),) + ((0, 0),) * (a.ndim - 2))
+    rc = padt(r).reshape(nchunk, chunk, hl, head_size)
+    kc = padt(k).reshape(nchunk, chunk, hl, head_size)
+    vc = padt(v).reshape(nchunk, chunk, hl, head_size)
+    wc = padt(logw).reshape(nchunk, chunk, hl, head_size)
+    segc = jnp.pad(seg_ids, (0, pad), constant_values=-1).reshape(
+        nchunk, chunk)
+
+    def chunk_step(S_seg, inp):
+        rk, kk, vk, lw, sk = inp
+        rk, kk, vk, lw = (a.astype(jnp.float32) for a in (rk, kk, vk, lw))
+        oneh = (sk[:, None] == jnp.arange(nseg)[None]).astype(jnp.float32)
+        L = jnp.cumsum(lw, axis=0)                             # (L,H,hs)
+        Lprev = L - lw
+        same = (sk[:, None] == sk[None, :]) & (sk >= 0)[:, None]
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1) & same
+        diff = Lprev[:, None] - L[None]                        # (t,s,H,hs)
+        dec = jnp.exp(jnp.minimum(
+            jnp.where(mask[..., None, None], diff, -jnp.inf), 0.0))
+        score = jnp.einsum("thc,tshc,shc->hts", rk, dec, kk)
+        diag = jnp.einsum("thc,hc,thc->th", rk, u, kk)
+        y = jnp.einsum("hts,shc->thc", score, vk)
+        y += diag[..., None] * vk
+        # inter-chunk: read the token's segment state, decayed since the
+        # segment's first in-chunk token (state reads exclude own w)
+        big = jnp.where(oneh[..., None, None] > 0, Lprev[:, None], -jnp.inf)
+        base = jnp.max(big, axis=0)                            # (S,H,hs)
+        base = jnp.where(jnp.isfinite(base), base, 0.0)
+        rdec = rk * jnp.exp(Lprev - base[jnp.maximum(sk, 0)])
+        S_tok = S_seg[jnp.maximum(sk, 0)]                      # (L,H,hs,hs)
+        y += jnp.einsum("thk,thkv->thv", rdec, S_tok)
+        # per-segment state update
+        seg_sum = jnp.einsum("ls,lhc->shc", oneh, lw)          # (S,H,hs)
+        segend = jnp.min(jnp.where(oneh[..., None, None] > 0, L[:, None],
+                                   jnp.inf), axis=0)           # (S,H,hs)
+        segend = jnp.where(jnp.isfinite(segend), segend, 0.0)
+        kdec = kk * jnp.exp(segend[jnp.maximum(sk, 0)] - L)
+        S_add = jnp.einsum("ls,lhk,lhv->shkv", oneh, kdec, vk)
+        S_new = S_seg * jnp.exp(seg_sum)[..., None] + S_add
+        return S_new, y
+
+    S_fin, ys = jax.lax.scan(chunk_step, S0, (rc, kc, vc, wc, segc))
+    y = ys.reshape(nchunk * chunk, hl, head_size)[:t][None]
+    y = _rwkv_out(p, y, g, dist, 1, t, norm_eps)
+    x = x + y
+
+    # ---- channel mix
+    xc = rms_norm(x, p["ln2"], norm_eps)
+    xc_prev = _packed_shift(xc[0], cm_shift, seg_ids, seg_start)
+    cm = _channel_mix(p, xc, xc_prev, dist)
+    x = x + cm
+    last = jnp.clip(seg_last, 0, t - 1)
+    att_out = xn[0][last][:, None]                             # (S, 1, d)
+    cm_out = xc[0][last][:, None]
     state = flatten_rwkv_state(S_fin, att_out, cm_out, rd)
     return x, state
 

@@ -210,6 +210,12 @@ class EncDecLM(DecoderLM):
         page_pos_sa = sq(batch.page_pos["full_attn"])
         write_sa = sq(batch.write_eids["full_attn"])
         tables_ca = sq(batch.tables["cross_attn"])
+        packed = batch.seg_ids is not None
+        page_seg_sa = page_seg_ca = page_pos_ca = None
+        if packed:
+            page_seg_sa = sq(batch.page_seg["full_attn"])
+            page_seg_ca = sq(batch.page_seg["cross_attn"])
+            page_pos_ca = sq(batch.page_pos["cross_attn"])
         kv_groups = (None if ri["repl"] == 1 else
                      A.replica_groups(ri["kv_tp"], ri["repl"]))
 
@@ -252,10 +258,15 @@ class EncDecLM(DecoderLM):
             # READ phase: gather self + cross pages before any write
             vshape = views["full_attn"]
             tpp = vshape[3]
-            k_all, v_all, slot_pos = BA.attn_gather(
-                buf, vshape, tables_sa, page_pos_sa, layer)
-            cview = buf.reshape(views["cross_attn"])
-            kc, vc = A.gather_pages(cview, tables_ca, layer)
+            k_all, v_all, slot_pos, slot_seg = BA.attn_gather(
+                buf, vshape, tables_sa, page_pos_sa, layer, page_seg_sa)
+            if packed:
+                kc, vc, slot_pos_ca, slot_seg_ca = BA.attn_gather(
+                    buf, views["cross_attn"], tables_ca, page_pos_ca,
+                    layer, page_seg_ca)
+            else:
+                cview = buf.reshape(views["cross_attn"])
+                kc, vc = A.gather_pages(cview, tables_ca, layer)
             # --- causal self attention (paged, fresh KV merged from registers)
             xn = layer_norm(x, ps["ln_w"], ps["ln_b"], eps)
             q = dense(xn, ps["q"], ps["q_bias"]).reshape(b, t, -1, cfg.head_dim)
@@ -264,12 +275,14 @@ class EncDecLM(DecoderLM):
                 b, t, ri["kv_local"], cfg.head_dim)
             q = A.group_q(q, ri["kv_local"])
             s = k_all.shape[1]
-            chunk_start = positions[:, :1]
-            if prefill:
+            chunk_start = (batch.chunk_start if packed
+                           else positions[:, :1])
+            if prefill or packed:
                 from .blocks_attn import _prefill_flash
                 o, m, l = _prefill_flash(q, k_all, v_all, slot_pos,
                                          positions, chunk_start=chunk_start,
-                                         window=0)
+                                         window=0, q_seg=batch.seg_ids,
+                                         kv_seg=slot_seg)
             else:
                 mask = slot_pos[:, None, :] < chunk_start[:, :, None]
                 o, m, l = A.attend_tokens(q, k_all, v_all, mask)
@@ -277,7 +290,11 @@ class EncDecLM(DecoderLM):
                 o, m, l = A.combine_partials(o, m, l, dist.tp_axis,
                                              groups=kv_groups)
             # fresh intra-chunk part
-            if t == 1:
+            if packed:
+                mask_f = A.segment_mask(batch.seg_ids, positions,
+                                        batch.seg_ids, positions)
+                of, mf, lf = A.attend_tokens(q, k, v, mask_f)
+            elif t == 1:
                 mask_f = jnp.ones((b, 1, 1), bool)
                 of, mf, lf = A.attend_tokens(q, k, v, mask_f)
             elif t <= 256:
@@ -294,11 +311,23 @@ class EncDecLM(DecoderLM):
             q = dense(xn, pc["q"], pc["q_bias"]).reshape(b, t, -1, cfg.head_dim)
             q = A.group_q(q, ri["kv_local"])
             sc = kc.shape[1]
-            mask = jnp.broadcast_to(
-                (jnp.arange(sc)[None] < batch.enc_lens[:, None])[:, None],
-                (b, t, sc))
+            if packed:
+                # enc_lens is per TOKEN; slot_pos_ca carries each flat
+                # cross slot's encoder position, slot_seg_ca its segment
+                mask = (slot_seg_ca[:, None, :] == batch.seg_ids[:, :, None]) \
+                    & (slot_pos_ca[:, None, :] < batch.enc_lens[:, :, None])
+            else:
+                mask = jnp.broadcast_to(
+                    (jnp.arange(sc)[None] < batch.enc_lens[:, None])[:, None],
+                    (b, t, sc))
             o, m, l = A.attend_tokens(q, kc, vc, mask)
             out = A.finalize_softmax(o, l).reshape(b, t, -1).astype(x.dtype)
+            if packed:
+                # all-masked rows degenerate to a uniform average over the
+                # WHOLE flat slot stream (other segments' values); a padded
+                # row would average its own zeroed pages instead — zero
+                # no-encoder tokens explicitly so the layouts agree
+                out = out * (batch.enc_lens > 0)[..., None].astype(out.dtype)
             y = psum_tp(dense(out, pc["o"]), dist)
             x = x + y + pc["o_bias"].astype(y.dtype)
             x = self._mlp(pm, x, eps)
@@ -312,7 +341,9 @@ class EncDecLM(DecoderLM):
             ((params["dec_self"], params["dec_cross"], params["dec_mlp"]),
              jnp.arange(cfg.num_layers)))
         x = layer_norm(x, params["final_ln_w"], params["final_ln_b"], eps)
-        if batch.last_idx is not None:
+        if packed:
+            x = jnp.take(x[0], batch.seg_last_tok, axis=0)[:, None]
+        elif batch.last_idx is not None:
             x = jnp.take_along_axis(
                 x, batch.last_idx[:, None, None].astype(jnp.int32), axis=1)
         else:

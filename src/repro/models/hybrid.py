@@ -189,6 +189,8 @@ class HybridLM(DecoderLM):
         page_pos = sq(batch.page_pos["full_attn"])
         write_eids = sq(batch.write_eids["full_attn"])
         state_eids = jnp.squeeze(batch.state_eids["mamba"], axis=0)
+        packed = batch.seg_ids is not None
+        page_seg = sq(batch.page_seg["full_attn"]) if packed else None
         kv_groups = (None if self.ri["repl"] == 1 else
                      A.replica_groups(self.ri["kv_tp"], self.ri["repl"]))
         ae = cfg.attn_every
@@ -204,11 +206,17 @@ class HybridLM(DecoderLM):
         lidx = batch.last_idx
         lmask = (None if lidx is None else
                  jnp.arange(t)[None] <= lidx[:, None])
+        seg_kw = {} if not packed else dict(
+            seg_ids=batch.seg_ids[0], seg_start=batch.seg_start_tok[0],
+            seg_last=batch.seg_last_tok)
 
         def run_mamba(pj, x, buf, layer_idx):
             view = buf.reshape(views["mamba"])
             st = A.read_state(view, layer_idx, state_eids)
-            if prefill:
+            if packed:
+                x, st = BS.mamba2_packed(pj, x, dist, self.md,
+                                         init_state=st, **seg_kw, **mkw)
+            elif prefill:
                 x, st = BS.mamba2_chunked(pj, x, dist, self.md,
                                           init_state=st, length_mask=lmask,
                                           last_idx=lidx, **mkw)
@@ -224,7 +232,7 @@ class HybridLM(DecoderLM):
             # READ phase first: gather the shared-attn pages before any of
             # this iteration's buffer writes (in-place aliasing)
             gathered = BA.attn_gather(buf, views["full_attn"], tables,
-                                      page_pos, cyc)
+                                      page_pos, cyc, page_seg)
             # inner scan: one mamba block per iteration (read own state,
             # then write it -> read-before-write per inner iteration)
             def mamba_iter(carry, xs2):
@@ -239,7 +247,8 @@ class HybridLM(DecoderLM):
                 kv_local=self.ri["kv_local"], head_dim=cfg.head_dim,
                 positions=positions, seq_lens=batch.seq_lens,
                 rope_theta=cfg.rope_theta, norm_eps=cfg.norm_eps,
-                prefill=prefill, sp_axis=sp_axis, kv_groups=kv_groups)
+                prefill=prefill, sp_axis=sp_axis, kv_groups=kv_groups,
+                seg_ids=batch.seg_ids, chunk_start=batch.chunk_start)
             x = BA.mlp_block(shared, x, dist, cfg.norm_eps)
             buf = BA.attn_write(buf, views["full_attn"], cyc, write_eids,
                                 positions, k, v)
@@ -260,7 +269,9 @@ class HybridLM(DecoderLM):
             (x, buffer), _ = jax.lax.scan(
                 tail_body, (x, buffer), (tail, jnp.arange(self.n_tail)))
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-        if batch.last_idx is not None:
+        if packed:
+            x = jnp.take(x[0], batch.seg_last_tok, axis=0)[:, None]
+        elif batch.last_idx is not None:
             x = jnp.take_along_axis(
                 x, batch.last_idx[:, None, None].astype(jnp.int32), axis=1)
         else:

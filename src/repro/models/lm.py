@@ -28,6 +28,15 @@ from .tp import (Dist, embed_lookup, expand_gqa_kv, expand_gqa_o,
 
 @dataclasses.dataclass
 class DecodeBatch:
+    """One serving step's device inputs. Two layouts share this container:
+
+    * padded — one row per sequence, (B, T) padded to the longest chunk;
+      the packed fields below are all None.
+    * packed — ALL sequences flattened into one (1, TT) token stream with
+      per-token segment ids; rows of per-type page tables are likewise
+      flattened into one stream with per-page owning segments. T/TT are
+      interchangeable in the shape comments below.
+    """
     tokens: Any            # (B, T) i32
     positions: Any         # (B, T) i32 absolute positions of the new tokens
     seq_lens: Any          # (B,) i32 total kv length after this step
@@ -41,7 +50,13 @@ class DecodeBatch:
     last_idx: Any = None         # (B,) index of last valid token (prefill)
     enc_embeds: Any = None       # (B, S_enc, d) enc-dec stub frontend
     enc_write_eids: Any = None   # (S, B_loc, S_enc)
-    enc_lens: Any = None         # (B,)
+    enc_lens: Any = None         # (B,) — packed: (1, TT) per token
+    # ---- packed-stream fields (None in the padded layout) ----
+    seg_ids: Any = None          # (1, TT) i32 segment id per token (-1 pad)
+    chunk_start: Any = None      # (1, TT) i32 chunk-start position per token
+    seg_start_tok: Any = None    # (1, TT) i32 stream idx of segment's first tok
+    seg_last_tok: Any = None     # (N_seg,) i32 stream idx of segment's last tok
+    page_seg: Any = None         # type -> (S, B_loc, P) i32 owning segment
 
 
 jax.tree_util.register_dataclass(
@@ -49,7 +64,8 @@ jax.tree_util.register_dataclass(
     data_fields=["tokens", "positions", "seq_lens", "tables", "page_pos",
                  "write_eids", "state_eids", "mm_embeds", "mm_mask",
                  "mrope_pos", "last_idx", "enc_embeds", "enc_write_eids",
-                 "enc_lens"],
+                 "enc_lens", "seg_ids", "chunk_start", "seg_start_tok",
+                 "seg_last_tok", "page_seg"],
     meta_fields=[])
 
 
@@ -354,11 +370,17 @@ class DecoderLM:
         only selects the kernel schedule (chunked flash vs materialized
         T=1 decode), never the masking semantics.
 
-        Returns (logits (B, V_pad), buffer)."""
+        PACKED layout (``batch.seg_ids`` is not None): the whole step is one
+        (1, TT) token stream; per-token/per-segment arrays are replicated
+        across the dp axis and logits come back one row PER SEGMENT (in
+        plan order) instead of per batch row.
+
+        Returns (logits (B or N_seg, V_pad), buffer)."""
         cfg, dist = self.cfg, self.dist
         dp = _dp_spec(dist)
         sp = dist.sp
-        bspec = P(None) if sp else P(dp)
+        packed = batch.seg_ids is not None
+        bspec = P(None) if (sp or packed) else P(dp)
         shard_dim_spec = "data" if sp else dp
         batch_specs = DecodeBatch(
             tokens=bspec, positions=bspec, seq_lens=bspec,
@@ -369,15 +391,22 @@ class DecoderLM:
             state_eids={k: P(shard_dim_spec) for k in batch.state_eids},
             mm_embeds=bspec if batch.mm_embeds is not None else None,
             mm_mask=bspec if batch.mm_mask is not None else None,
-            mrope_pos=P(None, *([None] if sp else [dp])) if batch.mrope_pos is not None else None,
+            mrope_pos=P(None, *([None] if (sp or packed) else [dp])) if batch.mrope_pos is not None else None,
             last_idx=bspec if batch.last_idx is not None else None,
             enc_embeds=bspec if batch.enc_embeds is not None else None,
             enc_write_eids=(P(shard_dim_spec, "model")
                             if batch.enc_write_eids is not None else None),
             enc_lens=bspec if batch.enc_lens is not None else None,
+            seg_ids=bspec if packed else None,
+            chunk_start=bspec if packed else None,
+            seg_start_tok=bspec if packed else None,
+            seg_last_tok=P(None) if packed else None,
+            page_seg=({k: P(shard_dim_spec, "model") for k in batch.page_seg}
+                      if packed else None),
         )
         buf_spec = P(shard_dim_spec, "model")
-        out_logit_spec = P(None, "model") if sp else P(dp, "model")
+        out_logit_spec = (P(None, "model") if (sp or packed)
+                          else P(dp, "model"))
         fn = shard_map(
             partial(self._serve_body, prefill=prefill),
             mesh=dist.mesh,
@@ -420,6 +449,9 @@ class DecoderLM:
         tables = {k: sq(v) for k, v in batch.tables.items()}
         page_pos = {k: sq(v) for k, v in batch.page_pos.items()}
         write_eids = {k: sq(v) for k, v in batch.write_eids.items()}
+        packed = batch.seg_ids is not None
+        page_seg = ({k: sq(v) for k, v in batch.page_seg.items()}
+                    if packed else {})
         sp_axis = "data" if dist.sp else None
         ri = self.ri
         kv_groups = (None if ri["repl"] == 1 else
@@ -436,7 +468,7 @@ class DecoderLM:
                 layer_in_type = cycle * self.cnt[kind] + self.rank_in_period[j]
                 gathered.append(BA.attn_gather(
                     buf, views[tname], tables[tname], page_pos[tname],
-                    layer_in_type))
+                    layer_in_type, page_seg.get(tname)))
             writes = []
             for j, kind in enumerate(self.period_kinds):
                 pj = self._fsdp_gather(jax.tree.map(lambda a: a[j],
@@ -450,7 +482,8 @@ class DecoderLM:
                     positions=positions, seq_lens=batch.seq_lens,
                     window=window, rope_theta=cfg.rope_theta,
                     mrope_positions=mrope_pos, norm_eps=cfg.norm_eps,
-                    prefill=prefill, sp_axis=sp_axis, kv_groups=kv_groups)
+                    prefill=prefill, sp_axis=sp_axis, kv_groups=kv_groups,
+                    seg_ids=batch.seg_ids, chunk_start=batch.chunk_start)
                 writes.append((tname, layer_in_type, k, v))
                 if self.is_moe:
                     x, _ = BA.moe_block(
@@ -469,7 +502,10 @@ class DecoderLM:
         (x, buffer), _ = jax.lax.scan(
             cycle_body, (x, buffer), (stacked, jnp.arange(self.cycles)))
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-        if batch.last_idx is not None:
+        if packed:
+            # one logits row per SEGMENT: its last token in the stream
+            x = jnp.take(x[0], batch.seg_last_tok, axis=0)[:, None]
+        elif batch.last_idx is not None:
             x = jnp.take_along_axis(
                 x, batch.last_idx[:, None, None].astype(jnp.int32), axis=1)
         else:

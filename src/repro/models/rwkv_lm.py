@@ -131,16 +131,25 @@ class RWKVLM(DecoderLM):
         state_eids = jnp.squeeze(batch.state_eids["rwkv"], axis=0)
         # ragged mixed batch: padded tokens must not enter the wkv state
         t = batch.tokens.shape[1]
+        packed = batch.seg_ids is not None
         lidx = batch.last_idx
         lmask = (None if lidx is None else
                  jnp.arange(t)[None] <= lidx[:, None])
+        seg_kw = {} if not packed else dict(
+            seg_ids=batch.seg_ids[0], seg_start=batch.seg_start_tok[0],
+            seg_last=batch.seg_last_tok)
 
         def body(carry, xs):
             x, buf = carry
             pj, layer = xs
             view = buf.reshape(views["rwkv"])
             st = A.read_state(view, layer, state_eids)
-            if prefill:
+            if packed:
+                x, st = BS.rwkv6_packed(pj, x, dist, self.rd,
+                                        head_size=cfg.rwkv_head_size,
+                                        norm_eps=cfg.norm_eps, init_state=st,
+                                        **seg_kw)
+            elif prefill:
                 x, st = BS.rwkv6_chunked(pj, x, dist, self.rd,
                                          head_size=cfg.rwkv_head_size,
                                          norm_eps=cfg.norm_eps, init_state=st,
@@ -156,7 +165,9 @@ class RWKVLM(DecoderLM):
             body, (x, buffer),
             (params["layers"], jnp.arange(cfg.num_layers)))
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-        if batch.last_idx is not None:
+        if packed:
+            x = jnp.take(x[0], batch.seg_last_tok, axis=0)[:, None]
+        elif batch.last_idx is not None:
             x = jnp.take_along_axis(
                 x, batch.last_idx[:, None, None].astype(jnp.int32), axis=1)
         else:

@@ -9,10 +9,13 @@ sample / retire:
      decode — and commits the step's page allocation transactionally;
   2. the step's state-restore copies run as one batched dispatch;
   3. ``ModelRunner.run_plan`` executes the whole mixed plan in a single
-     jitted ``serve_step`` (ragged rows padded to the bucket);
-  4. every scheduled request advances; requests past their prompt sample a
-     token; checkpoint copies emitted by ``advance`` run as one batched
-     dispatch at the end of the step.
+     jitted ``serve_step`` — token-packed into one (total_tokens,) stream
+     with per-token segment ids by default ("packed"), or as (B, T)-padded
+     rows under the PR-1 layout ("padded");
+  4. every scheduled request advances; the engine samples PER SEGMENT
+     (logits come back one row per scheduled item, in plan order);
+     checkpoint copies emitted by ``advance`` run as one batched dispatch
+     at the end of the step.
 
 ``batching_mode="serial"`` reproduces the legacy one-prefill-chunk-per-step
 engine (prefill and decode as separate dispatches) for step-count A/Bs and
@@ -49,7 +52,14 @@ class EngineConfig:
     max_running: int = 16
     chunk_size: int = 64               # per-request prefill chunk cap
     max_num_batched_tokens: int = 256  # per-step mixed-batch token budget
-    batching_mode: str = "mixed"       # "mixed" | "serial" (legacy 1-prefill)
+    max_prefill_tokens_per_step: Optional[int] = None  # long-prefill cap
+    # "packed"  — one (total_tokens,) token stream with per-token segment
+    #             ids (vLLM-style varlen dispatch; per-step FLOPs follow
+    #             the token budget);
+    # "padded"  — the PR-1 mixed layout, one (B, T)-padded row/sequence
+    #             ("mixed" is accepted as a legacy alias);
+    # "serial"  — legacy one-prefill-chunk-per-step, two dispatch groups.
+    batching_mode: str = "packed"
     enable_prefix_caching: bool = True
     memory_mode: str = "jenga"       # "jenga" | "paged-baseline"
     geometry_mode: str = "lcm"        # "lcm" | "max"
@@ -68,14 +78,18 @@ class StepMetrics:
     waste_units: int = 0
     num_prefills: int = 0      # concurrent prefill chunks this step
     batched_tokens: int = 0    # total tokens in the mixed batch
+    dispatched_slots: int = 0  # stream/row slots the dispatch actually paid
 
 
 class Engine:
     def __init__(self, model, cfg: EngineConfig,
                  params=None, seed: int = 0):
         self.model = model
+        if cfg.batching_mode == "mixed":        # legacy alias for PR-1 mode
+            cfg = dataclasses.replace(cfg, batching_mode="padded")
         self.cfg = cfg
-        assert cfg.batching_mode in ("mixed", "serial"), cfg.batching_mode
+        assert cfg.batching_mode in ("packed", "padded", "serial"), \
+            cfg.batching_mode
         baseline = cfg.memory_mode == "paged-baseline"
         self.mgr = JengaKVCacheManager(
             model.kv_specs(),
@@ -92,6 +106,7 @@ class Engine:
                 max_running=cfg.max_running,
                 chunk_size=cfg.chunk_size,
                 max_num_batched_tokens=cfg.max_num_batched_tokens,
+                max_prefill_tokens_per_step=cfg.max_prefill_tokens_per_step,
                 serial=cfg.batching_mode == "serial"))
         self.runner = ModelRunner(model, self.mgr,
                                   stub_embed_fn=stub_modality_embed)
@@ -141,6 +156,7 @@ class Engine:
         n_prefills = len(plan.prefills)
         prefill_tokens = plan.prefill_tokens
         batched_tokens = plan.total_tokens
+        slots_before = self.runner.slots_dispatched
         if plan.scheduled:
             self._count_encoder_runs(plan.scheduled)
             if self.cfg.batching_mode == "serial":
@@ -150,10 +166,12 @@ class Engine:
                                        if not s.is_prefill]) if g]
             else:
                 groups = [plan.scheduled]
+            packed = self.cfg.batching_mode == "packed"
             post_ops: List[StateCopyOp] = []
             for group in groups:
                 logits = self.runner.run_plan(
-                    self.params, [(s.req, s.num_tokens) for s in group])
+                    self.params, [(s.req, s.num_tokens) for s in group],
+                    packed=packed)
                 for i, s in enumerate(group):
                     post_ops.extend(self._advance(s, logits[i]))
             # checkpoint copies emitted while advancing: one batched dispatch
@@ -170,6 +188,7 @@ class Engine:
             free_units=stats.free_units,
             num_prefills=n_prefills,
             batched_tokens=batched_tokens,
+            dispatched_slots=self.runner.slots_dispatched - slots_before,
         )
         self.metrics.append(m)
         self.step_count += 1

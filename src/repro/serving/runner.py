@@ -1,12 +1,25 @@
-"""ModelRunner: builds padded device batches from Jenga manager state and
-runs bucketed jitted serve steps (no retrace across allocator changes —
-exec page ids are plain i32 data, the paper's §4.2 property).
+"""ModelRunner: builds device batches from Jenga manager state and runs
+bucketed jitted serve steps (no retrace across allocator changes — exec
+page ids are plain i32 data, the paper's §4.2 property).
 
-Mixed-batch model: one ``run_plan`` call executes a whole scheduler step —
-any number of concurrent prefill chunks plus all decodes — as a single
-dispatch. Per-sequence token counts are ragged; rows are padded to the
-(B, T) bucket with SENTINEL positions so padded slots can never attend or
-be attended to.
+One ``run_plan`` call executes a whole scheduler step — any number of
+concurrent prefill chunks plus all decodes — as a single dispatch, in one
+of two layouts:
+
+* PACKED (default, vLLM-style): the step is flattened into ONE
+  ``(total_tokens_bucket,)`` token stream with per-token ``segment_ids``,
+  absolute ``positions``, per-token KV write targets, and per-segment
+  ``(start, last_tok)`` metadata; per-type page tables are likewise
+  flattened into one page stream with per-page owning segments. Per-step
+  FLOPs in the dense layers are proportional to the scheduler's token
+  budget — a decode row co-scheduled with a 512-token prefill chunk no
+  longer pays 512 tokens of padding. Token buckets are pow2 up to 16 then
+  multiples of 16 (see ``_tok_bucket``), so jit retraces stay bounded while
+  stream padding waste stays under ~10% on decode-heavy mixed steps.
+
+* PADDED (the PR-1 layout, kept for A/Bs): one row per sequence, padded to
+  the ``(B=_pow2(n), T=_pow2(max_chunk))`` bucket with SENTINEL positions
+  at pads — per-step FLOPs scale with B*T, not with the token budget.
 
 Host-side cost model: per-request block tables are kept as persistent
 numpy mirrors updated incrementally from the manager's append/free deltas
@@ -39,6 +52,15 @@ def _pow2(n: int, lo: int = 1) -> int:
     while p < n:
         p *= 2
     return p
+
+
+def _tok_bucket(n: int) -> int:
+    """Packed-stream token bucket: pow2 below 16 (decode-only steps hit
+    exact small buckets), then multiples of 16 — bounded retraces with
+    <= 15 pad slots per dispatch instead of pow2's up-to-50% waste."""
+    if n <= 16:
+        return _pow2(n)
+    return 16 * (-(-n // 16))
 
 
 class _SeqMirror:
@@ -88,6 +110,11 @@ class ModelRunner:
                              if s.kind not in ("mamba", "rwkv")}
         self._state_specs = {n: s for n, s in self.specs.items()
                              if s.kind in ("mamba", "rwkv")}
+        # dispatch-efficiency counters (padding-waste A/B in benchmarks):
+        # real tokens vs. stream/row slots actually dispatched
+        self.tokens_dispatched = 0
+        self.slots_dispatched = 0
+        self.dispatch_count = 0
 
     # -------------------------------------------------------------- mirrors
     def _mirror(self, seq: SequenceState) -> _SeqMirror:
@@ -124,14 +151,74 @@ class ModelRunner:
         """Drop the mirror of a finished request."""
         self._mirrors.pop(rid, None)
 
+    # ------------------------------------------- shared per-item builders
+    def _mm_enc_flags(self, items) -> Tuple[bool, bool]:
+        cfg = self.model.cfg
+        has_mm = cfg.family == "vlm" and any(
+            r.in_prefill for r, _ in items)
+        has_enc = cfg.family == "encdec" and any(
+            r.in_prefill and r.seq.num_computed == 0 for r, _ in items)
+        return has_mm, has_enc
+
+    def _fresh_state_of(self, seq: SequenceState) -> List[Tuple[str, int]]:
+        """A request's very first chunk must see zero recurrent state; its
+        freshly allocated state pages hold whatever bytes last lived in
+        those units (prefix-cache restores land at start > 0, so they are
+        never clobbered here)."""
+        if seq.num_computed != 0:
+            return []
+        return [(name, seq.state_pages[name])
+                for name in self._state_specs if name in seq.state_pages]
+
+    def _fill_mm(self, seq, start, t_real, mm_embeds, mm_mask, row, col0):
+        """Route this chunk's vision embeddings: destination is
+        (row, col0 + p - start) — padded rows pass (bi, 0), the packed
+        stream (0, stream_offset)."""
+        d_model = self.model.cfg.d_model
+        for it in seq.mm_items:
+            for off in range(it.length):
+                p = it.start + off
+                if start <= p < start + t_real:
+                    mm_embeds[row, col0 + p - start] = self.stub_embed_fn(
+                        it.mm_hash, off, d_model)
+                    mm_mask[row, col0 + p - start] = True
+
+    def _fill_encoder(self, seq, mirror, enc_embeds, enc_write, row):
+        """First-chunk encdec prefill: stub encoder embeddings + cross-KV
+        write targets for one request, into row ``row`` (batch row when
+        padded, segment index when packed)."""
+        cfg = self.model.cfg
+        total_enc = sum(it.length for it in seq.encoder_items)
+        off0 = 0
+        for it in seq.encoder_items:
+            for off in range(it.length):
+                enc_embeds[row, off0 + off] = self.stub_embed_fn(
+                    it.mm_hash, off, cfg.d_model)
+            off0 += it.length
+        ctab = mirror.table.get("cross_attn")
+        tpp = self.specs["cross_attn"].tokens_per_page
+        for j in range(min(total_enc, cfg.encoder_seq)):
+            pg = j // tpp
+            if ctab is not None and pg < mirror.n.get(
+                    "cross_attn", 0) and ctab[pg] >= 0:
+                enc_write[0, 0, row, j] = ctab[pg]
+
     # ----------------------------------------------------------- batching
-    def build_plan(self, items: Sequence[Tuple[Request, int]]
-                   ) -> Tuple[DecodeBatch, dict]:
+    def build_plan(self, items: Sequence[Tuple[Request, int]],
+                   packed: bool = True) -> Tuple[DecodeBatch, dict]:
         """Flatten one scheduler step — ``items`` is [(request, num_tokens)]
-        with ragged per-sequence token counts — into a padded (B, T) mixed
-        batch. Padded slots get SENTINEL positions (never attended), padded
-        rows get -1 exec ids (writes dropped). Returns (batch, info)."""
-        specs = self.specs
+        with ragged per-sequence token counts — into a device batch:
+        token-packed stream (default) or padded (B, T) rows.
+        Returns (batch, info)."""
+        if packed:
+            return self._build_plan_packed(items)
+        return self._build_plan_padded(items)
+
+    def _build_plan_padded(self, items: Sequence[Tuple[Request, int]]
+                           ) -> Tuple[DecodeBatch, dict]:
+        """PR-1 layout: one row per sequence padded to the (B, T) bucket.
+        Padded slots get SENTINEL positions (never attended), padded rows
+        get -1 exec ids (writes dropped)."""
         n = len(items)
         assert n > 0
         B = _pow2(n)
@@ -156,10 +243,7 @@ class ModelRunner:
         state_eids = {s.name: np.full((1, B), -1, np.int32)
                       for s in self._state_specs.values()}
         cfg = self.model.cfg
-        has_mm = cfg.family == "vlm" and any(
-            r.in_prefill for r, _ in items)
-        has_enc = cfg.family == "encdec" and any(
-            r.in_prefill and r.seq.num_computed == 0 for r, _ in items)
+        has_mm, has_enc = self._mm_enc_flags(items)
         mm_embeds = mm_mask = mrope = None
         enc_embeds = enc_write = enc_lens = None
         if has_mm:
@@ -176,14 +260,7 @@ class ModelRunner:
         for bi, ((r, t_real), m) in enumerate(zip(items, mirrors)):
             seq = r.seq
             start = seq.num_computed
-            if start == 0:
-                # a request's very first chunk must see zero recurrent state;
-                # its freshly allocated state pages hold whatever bytes last
-                # lived in those units (prefix-cache restores land at
-                # start > 0, so they are never clobbered here)
-                fresh_state.extend((name, seq.state_pages[name])
-                                   for name in self._state_specs
-                                   if name in seq.state_pages)
+            fresh_state.extend(self._fresh_state_of(seq))
             toks = seq.tokens[start:start + t_real]
             tokens[bi, :len(toks)] = toks
             positions[bi, :t_real] = np.arange(start, start + t_real)
@@ -204,31 +281,12 @@ class ModelRunner:
                 if name in seq.state_pages:
                     state_eids[name][0, bi] = seq.state_pages[name]
             if has_mm and self.stub_embed_fn:
-                for it in seq.mm_items:
-                    for off in range(it.length):
-                        p = it.start + off
-                        if start <= p < start + t_real:
-                            mm_embeds[bi, p - start] = self.stub_embed_fn(
-                                it.mm_hash, off, cfg.d_model)
-                            mm_mask[bi, p - start] = True
+                self._fill_mm(seq, start, t_real, mm_embeds, mm_mask, bi, 0)
             if cfg.family == "encdec":
-                total_enc = sum(it.length for it in seq.encoder_items)
-                enc_lens[bi] = total_enc
+                enc_lens[bi] = sum(it.length for it in seq.encoder_items)
                 if has_enc and start == 0 and r.in_prefill \
                         and self.stub_embed_fn:
-                    off0 = 0
-                    for it in seq.encoder_items:
-                        for off in range(it.length):
-                            enc_embeds[bi, off0 + off] = self.stub_embed_fn(
-                                it.mm_hash, off, cfg.d_model)
-                        off0 += it.length
-                    ctab = m.table.get("cross_attn")
-                    tpp = specs["cross_attn"].tokens_per_page
-                    for j in range(min(total_enc, cfg.encoder_seq)):
-                        pg = j // tpp
-                        if ctab is not None and pg < m.n.get(
-                                "cross_attn", 0) and ctab[pg] >= 0:
-                            enc_write[0, 0, bi, j] = ctab[pg]
+                    self._fill_encoder(seq, m, enc_embeds, enc_write, bi)
         if has_mm:
             mrope = np.broadcast_to(positions[None], (3, B, T)).copy()
 
@@ -253,14 +311,138 @@ class ModelRunner:
         prefill = T > 1 or has_enc
         key = (prefill, B, T, tuple(sorted(p_need.items())), has_mm, has_enc)
         return batch, {"key": key, "n": n, "prefill": prefill,
-                       "fresh_state": fresh_state}
+                       "fresh_state": fresh_state,
+                       "tokens": sum(nt for _, nt in items), "slots": B * T}
+
+    def _build_plan_packed(self, items: Sequence[Tuple[Request, int]]
+                           ) -> Tuple[DecodeBatch, dict]:
+        """Token-packed layout: flatten the whole step into ONE
+        ``(TT,)`` token stream (TT = ``_tok_bucket(total_tokens)``) with
+        per-token segment ids / positions / chunk starts / KV write
+        targets, per-segment ``(start, last_tok)`` row metadata, and ONE
+        flat page stream per KV type tagged with per-page owning segments.
+        Pad tokens carry segment id -1 and SENTINEL positions; pad pages
+        carry segment id -2 — pads never match anything."""
+        n = len(items)
+        assert n > 0
+        total = sum(nt for _, nt in items)
+        TT = _tok_bucket(total)
+        S = _pow2(n)                                  # segment bucket
+        mirrors = [self._mirror(r.seq) for r, _ in items]
+        p_need: Dict[str, int] = {}                   # flat page-stream cap
+        for name in self._table_specs:
+            p_need[name] = _pow2(
+                max(1, sum(m.n.get(name, 0) for m in mirrors)), 4)
+        tokens = np.zeros((TT,), np.int32)
+        positions = np.full((TT,), SENTINEL_POS, np.int32)
+        seg_ids = np.full((TT,), -1, np.int32)
+        chunk_start = np.full((TT,), SENTINEL_POS, np.int32)
+        seg_start_tok = np.zeros((TT,), np.int32)
+        seg_last_tok = np.zeros((S,), np.int32)
+        seq_lens = np.ones((S,), np.int32)
+        tables = {k: np.full((1, 1, 1, p), -1, np.int32)
+                  for k, p in p_need.items()}
+        page_pos = {k: np.full((1, 1, 1, p), SENTINEL_POS, np.int32)
+                    for k, p in p_need.items()}
+        page_seg = {k: np.full((1, 1, 1, p), -2, np.int32)
+                    for k, p in p_need.items()}
+        write_eids = {k: np.full((1, 1, 1, TT), -1, np.int32)
+                      for k in p_need}
+        state_eids = {s.name: np.full((1, S), -1, np.int32)
+                      for s in self._state_specs.values()}
+        cfg = self.model.cfg
+        has_mm, has_enc = self._mm_enc_flags(items)
+        mm_embeds = mm_mask = mrope = None
+        enc_embeds = enc_write = enc_lens = None
+        if has_mm:
+            mm_embeds = np.zeros((1, TT, cfg.d_model), np.float32)
+            mm_mask = np.zeros((1, TT), bool)
+        if cfg.family == "encdec":
+            enc_lens = np.zeros((1, TT), np.int32)    # per TOKEN when packed
+            if has_enc:
+                enc_embeds = np.zeros((S, cfg.encoder_seq, cfg.d_model),
+                                      np.float32)
+                enc_write = np.full((1, 1, S, cfg.encoder_seq), -1, np.int32)
+
+        fresh_state: List[Tuple[str, int]] = []
+        page_cursor = {name: 0 for name in p_need}
+        off = 0
+        for si, ((r, t_real), m) in enumerate(zip(items, mirrors)):
+            seq = r.seq
+            start = seq.num_computed
+            fresh_state.extend(self._fresh_state_of(seq))
+            toks = seq.tokens[start:start + t_real]
+            tokens[off:off + len(toks)] = toks
+            positions[off:off + t_real] = np.arange(start, start + t_real)
+            seg_ids[off:off + t_real] = si
+            chunk_start[off:off + t_real] = start
+            seg_start_tok[off:off + t_real] = off
+            seg_last_tok[si] = off + t_real - 1
+            seq_lens[si] = start + t_real
+            for name, spec in self._table_specs.items():
+                nm = m.n.get(name, 0)
+                pc = page_cursor[name]
+                if nm:
+                    tables[name][0, 0, 0, pc:pc + nm] = m.table[name][:nm]
+                    page_pos[name][0, 0, 0, pc:pc + nm] = m.pos[name][:nm]
+                    page_seg[name][0, 0, 0, pc:pc + nm] = si
+                    page_cursor[name] = pc + nm
+                if spec.kind in ("full_attn", "swa"):
+                    tpp = spec.tokens_per_page
+                    pgs = (start + np.arange(t_real)) // tpp
+                    write_eids[name][0, 0, 0, off:off + t_real] = \
+                        m.table[name][pgs] if nm else -1
+            for name in state_eids:
+                if name in seq.state_pages:
+                    state_eids[name][0, si] = seq.state_pages[name]
+            if has_mm and self.stub_embed_fn:
+                self._fill_mm(seq, start, t_real, mm_embeds, mm_mask, 0, off)
+            if cfg.family == "encdec":
+                enc_lens[0, off:off + t_real] = \
+                    sum(it.length for it in seq.encoder_items)
+                if has_enc and start == 0 and r.in_prefill \
+                        and self.stub_embed_fn:
+                    self._fill_encoder(seq, m, enc_embeds, enc_write, si)
+            off += t_real
+        if has_mm:
+            mrope = np.broadcast_to(positions[None, None], (3, 1, TT)).copy()
+
+        batch = DecodeBatch(
+            tokens=jnp.asarray(tokens[None]),
+            positions=jnp.asarray(positions[None]),
+            seq_lens=jnp.asarray(seq_lens),
+            tables={k: jnp.asarray(v) for k, v in tables.items()},
+            page_pos={k: jnp.asarray(v) for k, v in page_pos.items()},
+            write_eids={k: jnp.asarray(v) for k, v in write_eids.items()},
+            state_eids={k: jnp.asarray(v) for k, v in state_eids.items()},
+            mm_embeds=None if mm_embeds is None else jnp.asarray(mm_embeds),
+            mm_mask=None if mm_mask is None else jnp.asarray(mm_mask),
+            mrope_pos=None if mrope is None else jnp.asarray(mrope),
+            last_idx=None,
+            enc_embeds=None if enc_embeds is None else jnp.asarray(enc_embeds),
+            enc_write_eids=None if enc_write is None else jnp.asarray(enc_write),
+            enc_lens=None if enc_lens is None else jnp.asarray(enc_lens),
+            seg_ids=jnp.asarray(seg_ids[None]),
+            chunk_start=jnp.asarray(chunk_start[None]),
+            seg_start_tok=jnp.asarray(seg_start_tok[None]),
+            seg_last_tok=jnp.asarray(seg_last_tok),
+            page_seg={k: jnp.asarray(v) for k, v in page_seg.items()},
+        )
+        key = ("packed", S, TT, tuple(sorted(p_need.items())),
+               has_mm, has_enc)
+        return batch, {"key": key, "n": n, "prefill": True,
+                       "fresh_state": fresh_state,
+                       "tokens": total, "slots": TT}
 
     # ----------------------------------------------------------------- run
-    def run_plan(self, params, items: Sequence[Tuple[Request, int]]
-                 ) -> np.ndarray:
+    def run_plan(self, params, items: Sequence[Tuple[Request, int]],
+                 packed: bool = True) -> np.ndarray:
         """Execute one mixed step plan in a single jitted dispatch. Returns
         last-token logits, one row per item, in plan order."""
-        batch, info = self.build_plan(items)
+        batch, info = self.build_plan(items, packed=packed)
+        self.tokens_dispatched += info["tokens"]
+        self.slots_dispatched += info["slots"]
+        self.dispatch_count += 1
         self.zero_pages(self.mgr.drain_fresh_pages())
         for name, eid in info["fresh_state"]:
             self.zero_page(name, eid)

@@ -35,6 +35,12 @@ class SchedulerConfig:
     max_running: int = 16
     chunk_size: int = 64            # serial-mode prefill chunk size
     max_num_batched_tokens: int = 256   # per-step mixed-batch token budget
+    # Latency-aware packing: cap on PREFILL tokens per step (None = the
+    # whole budget). Depth-first packing optimizes throughput, but a huge
+    # prompt would otherwise monopolize the step budget for many steps in a
+    # row and starve decode latency; the cap reserves the remainder of the
+    # budget for decodes every step.
+    max_prefill_tokens_per_step: Optional[int] = None
     max_preemptions: int = 100
     serial: bool = False            # legacy one-prefill-per-step schedule
 
@@ -54,9 +60,21 @@ class ScheduledSeq:
 class StepPlan:
     """Flattened mixed batch for one engine step: decodes first, then
     prefill chunks, all dispatched together (or in two groups under the
-    serial compat schedule)."""
+    serial compat schedule).
+
+    ``total_tokens`` / ``prefill_tokens`` are computed ONCE at construction
+    (the plan is immutable after ``schedule()`` returns) — consumers in the
+    engine/runner read the cached fields instead of re-walking the
+    scheduled list on every access."""
     scheduled: List[ScheduledSeq]
     copy_ops: List[StepCopy] = dataclasses.field(default_factory=list)
+    total_tokens: int = dataclasses.field(init=False, default=0)
+    prefill_tokens: int = dataclasses.field(init=False, default=0)
+
+    def __post_init__(self):
+        self.total_tokens = sum(s.num_tokens for s in self.scheduled)
+        self.prefill_tokens = sum(s.num_tokens for s in self.scheduled
+                                  if s.is_prefill)
 
     @property
     def decodes(self) -> List[Request]:
@@ -65,14 +83,6 @@ class StepPlan:
     @property
     def prefills(self) -> List[ScheduledSeq]:
         return [s for s in self.scheduled if s.is_prefill]
-
-    @property
-    def prefill_tokens(self) -> int:
-        return sum(s.num_tokens for s in self.scheduled if s.is_prefill)
-
-    @property
-    def total_tokens(self) -> int:
-        return sum(s.num_tokens for s in self.scheduled)
 
 
 StepCopy = StateCopyOp
@@ -125,19 +135,25 @@ class Scheduler:
         # (one request reaches decode quickly and frees its slack instead
         # of every request holding a memory-hungry partial prefill). The
         # per-request ``chunk_size`` cap only applies to the serial compat
-        # schedule; in mixed mode the budget IS the chunking control.
+        # schedule; in mixed mode the budget IS the chunking control —
+        # bounded by ``max_prefill_tokens_per_step`` so a huge prompt
+        # cannot monopolize every step's budget and starve decode latency.
         n_prefills = 0
+        p_budget = budget
+        if self.cfg.max_prefill_tokens_per_step is not None:
+            p_budget = min(p_budget, self.cfg.max_prefill_tokens_per_step)
         for req in self.running:
             if not req.in_prefill:
                 continue
             if self.cfg.serial and n_prefills >= 1:
                 break
-            cap = self.cfg.chunk_size if self.cfg.serial else budget
+            cap = self.cfg.chunk_size if self.cfg.serial else p_budget
             chunk = min(cap, len(req.prompt) - req.seq.num_computed)
             if chunk <= 0:
                 break               # out of budget; later prefills wait
             cands.append(ScheduledSeq(req, chunk, is_prefill=True))
             budget -= chunk
+            p_budget -= chunk
             n_prefills += 1
 
         # 3) batch-transactional allocation: retry until the WHOLE plan
@@ -172,6 +188,9 @@ class Scheduler:
             head = min(self.running, key=lambda r: r.arrival)
             cap = (self.cfg.chunk_size if self.cfg.serial
                    else self.cfg.max_num_batched_tokens)
+            if not self.cfg.serial and \
+                    self.cfg.max_prefill_tokens_per_step is not None:
+                cap = min(cap, self.cfg.max_prefill_tokens_per_step)
             nt = (min(cap, len(head.prompt) - head.seq.num_computed)
                   if head.in_prefill else 1)
             while not self.mgr.allocate_for_tokens(

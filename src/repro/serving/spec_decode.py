@@ -7,7 +7,12 @@ page sizes with negligible fragmentation — the paper's multi-model case.
 Greedy speculative decoding: the draft proposes k tokens; the target scores
 them in a single T=k+1 step; the longest agreeing prefix is accepted plus
 one bonus token; rejected tokens roll back (pages stay, content is
-overwritten later)."""
+overwritten later).
+
+Both runners dispatch through the default token-packed plan layout
+(``ModelRunner.run_plan(..., packed=True)``): each draft/verify call is a
+packed stream whose segments are the participating sequences, and logits
+come back one row per segment."""
 from __future__ import annotations
 
 import dataclasses

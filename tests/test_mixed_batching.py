@@ -1,10 +1,12 @@
-"""Token-budget mixed prefill/decode batching: packing, equivalence to the
-legacy serial engine, transactional batch allocation, and preemption.
+"""Token-budget mixed prefill/decode batching: packing, equivalence across
+the three batching layouts, transactional batch allocation, and preemption.
 
-The mixed engine packs multiple concurrent prefill chunks plus all decodes
-into ONE dispatch per step; ``batching_mode="serial"`` reproduces the old
+The engine packs multiple concurrent prefill chunks plus all decodes into
+ONE dispatch per step, as a token-packed stream (``"packed"``, default) or
+as padded per-sequence rows (``"padded"``, the PR-1 layout; ``"mixed"`` is
+a legacy alias); ``batching_mode="serial"`` reproduces the old
 one-prefill-chunk-per-step engine. Greedy outputs must be identical token
-for token across the two schedules for every model family.
+for token across all three schedules for every model family.
 """
 import numpy as np
 import pytest
@@ -64,24 +66,27 @@ def test_serial_mode_schedules_one_prefill():
 @pytest.mark.parametrize("arch", ["granite-3-2b", "h2o-danube-3-4b",
                                   "qwen2-vl-2b", "zamba2-1.2b", "rwkv6-3b",
                                   "whisper-tiny", "dbrx-132b"])
-def test_mixed_matches_serial_greedy(arch):
-    """Mixed-batch greedy outputs are identical token-for-token to the
-    legacy one-prefill-per-step schedule (ample memory: no preemption)."""
+def test_packed_padded_serial_greedy_equal(arch):
+    """Greedy outputs are identical token-for-token across all three
+    batching layouts — packed stream, padded rows, and the legacy
+    one-prefill-per-step schedule (ample memory: no preemption) — for
+    every model family (attention, swa, vlm, hybrid-mamba2, rwkv6,
+    encdec, moe)."""
     outs = {}
-    for mode in ("mixed", "serial"):
+    for mode in ("packed", "padded", "serial"):
         eng, _ = make_engine(arch, batching_mode=mode,
                              max_num_batched_tokens=64)
         outs[mode] = run_workload(eng)
-    assert outs["mixed"] == outs["serial"], (arch, outs)
+    assert outs["packed"] == outs["padded"] == outs["serial"], (arch, outs)
 
 
 @pytest.mark.parametrize("arch", ["qwen2-vl-2b", "whisper-tiny"])
-def test_mixed_matches_serial_multimodal(arch):
-    """Determinism with actual mm/encoder items: the mixed batch must route
-    mm embeddings / encoder KV writes to the right ragged rows."""
+def test_batching_modes_match_multimodal(arch):
+    """Determinism with actual mm/encoder items: packed/padded batches must
+    route mm embeddings / encoder KV writes to the right tokens/rows."""
     from repro.core.request import MMItem
     outs = {}
-    for mode in ("mixed", "serial"):
+    for mode in ("packed", "padded", "serial"):
         eng, cfg = make_engine(arch, batching_mode=mode,
                                max_num_batched_tokens=64)
         for i in range(2):
@@ -96,7 +101,7 @@ def test_mixed_matches_serial_multimodal(arch):
                                **kw))
         eng.run_until_done(max_steps=500)
         outs[mode] = {r.rid: list(r.output) for r in eng.finished}
-    assert outs["mixed"] == outs["serial"], (arch, outs)
+    assert outs["packed"] == outs["padded"] == outs["serial"], (arch, outs)
 
 
 def test_mixed_chunk_size_invariance():

@@ -416,9 +416,12 @@ class JengaKVCacheManager:
                        journal: List) -> bool:
         """Grow ``req``'s tables so tokens [num_computed, target) can be
         computed, recording every fresh page in ``journal``. Returns False
-        (without rolling back — the caller owns the journal) on exhaustion."""
+        (without rolling back — the caller owns the journal) on exhaustion.
+
+        ``target`` may exceed ``len(req.tokens)``: the async scheduler
+        commits pages for a decode token whose id is only sampled when the
+        in-flight step's logits land (speculative +1 scheduling)."""
         self._ensure_aux(req)
-        target = min(target, len(req.tokens))
         for spec in self.specs:
             name, pool = spec.name, self.pools[spec.name]
             tpp = spec.tokens_per_page
@@ -469,6 +472,51 @@ class JengaKVCacheManager:
         """Ensure page capacity so tokens [num_computed, target) can be
         computed. Transactional: on failure nothing changes."""
         return self.allocate_for_batch([req], [target])
+
+    def rollback_tokens(self, req: SequenceState, target: int) -> int:
+        """Undo trailing page allocations beyond what ``target`` computed
+        tokens need — the async scheduler's speculative-decode rollback: a
+        plan pre-commits a +1 decode page for every running request via
+        ``allocate_for_batch``; when the in-flight step's logits reveal the
+        request actually finished (EOS / token budget), the page committed
+        for the never-computed token is popped here before the request is
+        released.
+
+        Pops trailing table entries (runner mirrors resync by table LENGTH,
+        so the epoch is deliberately NOT bumped — a bump would force a full
+        mirror rebuild and drop the freed-events cursor) and frees the
+        non-FREED ones; popped pages are also purged from the fresh-page
+        (zero-on-first-use) queue. State pages and ``num_computed`` are
+        untouched. Returns the number of pages freed."""
+        freed = 0
+        popped: Set[Tuple[str, int]] = set()
+        for spec in self.specs:
+            if spec.kind in STATE_KINDS:
+                continue
+            name, pool = spec.name, self.pools[spec.name]
+            tpp = spec.tokens_per_page
+            if spec.kind in TOKEN_KINDS:
+                need = -(-target // tpp)
+            else:  # mm kinds
+                need = -(-self._mm_storage_upto(req, spec, target) // tpp)
+            table = req.page_tables.get(name)
+            if not table or len(table) <= need:
+                continue
+            hlist = req.page_hashes.get(name, [])
+            while len(table) > need:
+                eid = table.pop()
+                if len(hlist) > len(table):
+                    hlist.pop()
+                if eid == SequenceState.FREED:
+                    continue
+                pool.free(eid)
+                popped.add((name, eid))
+                freed += 1
+            req.mark_trimmed(name)
+        if popped:
+            self._fresh_pages = [p for p in self._fresh_pages
+                                 if p not in popped]
+        return freed
 
     # --------------------------------------------------------------- advance
     def advance(self, req: SequenceState, num_new: int) -> List[StateCopyOp]:
@@ -648,10 +696,16 @@ class JengaKVCacheManager:
         if aux is not None:
             aux.keys = aux.keys[: len(req.tokens)]
 
-    def preempt_request(self, req: SequenceState) -> None:
+    def preempt_request(self, req: SequenceState, cache: bool = True) -> None:
         """Recompute-style preemption: release everything (cacheable pages go
-        to the prefix cache), reset progress; the scheduler re-queues."""
-        self.free_request(req, cache=True)
+        to the prefix cache), reset progress; the scheduler re-queues.
+
+        ``cache=False`` is required when the victim has a step IN FLIGHT on
+        the device (async scheduling): the dispatch is still mutating the
+        victim's live state page past the position its boundary hash
+        describes, so releasing it to the prefix cache would poison later
+        hits with content from a longer prefix than the hash claims."""
+        self.free_request(req, cache=cache)
         req.num_computed = 0
         req.prefix_hit_tokens = 0
         req.page_tables.clear()

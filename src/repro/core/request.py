@@ -33,6 +33,10 @@ class SequenceState:
         ``len(page_tables[type])`` (the manager only ever appends);
       * mid-table frees (sliding-window retirement, vision free-on-consume)
         are published to the append-only ``freed_events`` log;
+      * trailing pops (speculative-decode rollback under async scheduling)
+        are published to ``trim_events`` as (type, new_length) — a mirror
+        replays them as in-order length clamps, so a table that shrinks and
+        regrows to the same length still re-syncs its tail correctly;
       * ``epoch`` is bumped whenever the tables are invalidated wholesale
         (request free / preemption) — a mirror with a stale epoch rebuilds.
     """
@@ -59,15 +63,24 @@ class SequenceState:
     epoch: int = 0
     freed_events: List[Tuple[str, int]] = dataclasses.field(
         default_factory=list)
+    trim_events: List[Tuple[str, int]] = dataclasses.field(
+        default_factory=list)
 
     def mark_freed(self, type_name: str, idx: int) -> None:
         """Set a page-table entry to FREED and publish the delta."""
         self.page_tables[type_name][idx] = self.FREED
         self.freed_events.append((type_name, idx))
 
+    def mark_trimmed(self, type_name: str) -> None:
+        """Publish that trailing entries were popped from a table
+        (speculative rollback): mirrors clamp their synced length to the
+        table's current length before re-appending."""
+        self.trim_events.append((type_name, len(self.page_tables[type_name])))
+
     def bump_epoch(self) -> None:
         self.epoch += 1
         self.freed_events.clear()
+        self.trim_events.clear()
 
     def append_token(self, tok: int) -> None:
         self.tokens.append(tok)

@@ -8,14 +8,31 @@ sample / retire:
      running requests — any number of concurrent prefill chunks plus every
      decode — and commits the step's page allocation transactionally;
   2. the step's state-restore copies run as one batched dispatch;
-  3. ``ModelRunner.run_plan`` executes the whole mixed plan in a single
-     jitted ``serve_step`` — token-packed into one (total_tokens,) stream
-     with per-token segment ids by default ("packed"), or as (B, T)-padded
-     rows under the PR-1 layout ("padded");
+  3. ``ModelRunner.prepare``/``dispatch`` executes the whole mixed plan in
+     a single jitted ``serve_step`` — token-packed into one (total_tokens,)
+     stream with per-token segment ids by default ("packed"), or as
+     (B, T)-padded rows under the PR-1 layout ("padded");
   4. every scheduled request advances; the engine samples PER SEGMENT
      (logits come back one row per scheduled item, in plan order);
      checkpoint copies emitted by ``advance`` run as one batched dispatch
      at the end of the step.
+
+ASYNC SCHEDULING (``EngineConfig.async_scheduling``, double-buffered):
+while step N's dispatch is in flight on the device, the host plans step
+N+1 and builds its packed batch — sampling and advancing step N happen one
+step later, when its logits are fetched. Decode rows in plan N+1 are
+scheduled SPECULATIVELY (each running decode assumed to produce +1 token,
+vLLM async-scheduling style) with their pages pre-committed through the
+manager's transactional ``allocate_for_batch``; when the fetched logits
+reveal a request actually finished (EOS / token budget), its segment in
+the already-built batch is neutralized to pad semantics and its
+speculative +1 page commitment rolled back (``mgr.rollback_tokens``)
+before the batch is dispatched. Greedy outputs are bit-identical to the
+synchronous loop: segments are isolated by the packed segment mask, so a
+dead slot changes nothing for its neighbours, and recompute preemption is
+semantically transparent. ``async_scheduling`` composes with
+``batching_mode`` "packed" and "padded"; "serial" (two dispatch groups per
+step) falls back to the synchronous loop.
 
 ``batching_mode="serial"`` reproduces the legacy one-prefill-chunk-per-step
 engine (prefill and decode as separate dispatches) for step-count A/Bs and
@@ -23,7 +40,9 @@ determinism tests.
 
 Collects the per-step metrics the paper's figures are built from (decode
 batch size Fig.15, memory breakdown Fig.16, hit rates Fig.17, encoder runs
-Fig.18) plus the mixed-batch packing stats (tokens/step, prefills/step)."""
+Fig.18) plus the mixed-batch packing stats (tokens/step, prefills/step),
+dispatch-waste counters (tokens vs slots paid), and the host-build /
+device-wait timings the async overlap is measured by."""
 from __future__ import annotations
 
 import dataclasses
@@ -35,7 +54,7 @@ import numpy as np
 from ..core.manager import JengaKVCacheManager, StateCopyOp
 from ..core.spec import KVCacheSpec
 from .request import Request, SamplingParams, Status
-from .runner import ModelRunner
+from .runner import ModelRunner, PreparedStep
 from .scheduler import ScheduledSeq, Scheduler, SchedulerConfig, StepPlan
 
 
@@ -60,6 +79,12 @@ class EngineConfig:
     #             ("mixed" is accepted as a legacy alias);
     # "serial"  — legacy one-prefill-chunk-per-step, two dispatch groups.
     batching_mode: str = "packed"
+    # Double-buffered step: plan + host-build step N+1 while step N's
+    # dispatch is in flight; sample/advance one step delayed. Greedy
+    # outputs are bit-identical to the synchronous loop. Composes with
+    # "packed"/"padded"; "serial" falls back to the synchronous loop
+    # (its two dispatch groups per step defeat single-slot buffering).
+    async_scheduling: bool = False
     enable_prefix_caching: bool = True
     memory_mode: str = "jenga"       # "jenga" | "paged-baseline"
     geometry_mode: str = "lcm"        # "lcm" | "max"
@@ -79,6 +104,25 @@ class StepMetrics:
     num_prefills: int = 0      # concurrent prefill chunks this step
     batched_tokens: int = 0    # total tokens in the mixed batch
     dispatched_slots: int = 0  # stream/row slots the dispatch actually paid
+    pad_slots: int = 0         # slots paid beyond real tokens (waste)
+    host_build_ms: float = 0.0  # host-side schedule + batch-build time
+    # Device-wait time: sync = dispatch+fetch of THIS step's logits; async
+    # = time blocked fetching the PREVIOUS step's logits after this step's
+    # host build already ran (the overlap win is host_build_ms no longer
+    # serializing with it).
+    dispatch_ms: float = 0.0
+
+
+@dataclasses.dataclass
+class _InflightStep:
+    """A dispatched-but-not-completed step (async double buffering). The
+    PreparedStep itself is NOT retained — after dispatch only the plan and
+    per-segment liveness matter."""
+    plan: StepPlan
+    handle: object             # device logits (JAX async dispatch)
+    epochs: List[int]          # per-segment seq.epoch at dispatch time
+    live: List[bool]           # False: segment killed at reconciliation
+    step: int                  # engine step index this dispatch was logged as
 
 
 class Engine:
@@ -90,6 +134,10 @@ class Engine:
         self.cfg = cfg
         assert cfg.batching_mode in ("packed", "padded", "serial"), \
             cfg.batching_mode
+        # serial mode issues two dispatch groups per step — double buffering
+        # would interleave their completions; fall back to the sync loop
+        self.async_scheduling = bool(cfg.async_scheduling) and \
+            cfg.batching_mode != "serial"
         baseline = cfg.memory_mode == "paged-baseline"
         self.mgr = JengaKVCacheManager(
             model.kv_specs(),
@@ -116,6 +164,12 @@ class Engine:
         self.encoder_runs = 0
         self.mm_seen: set = set()
         self.finished: List[Request] = []
+        self._inflight: Optional[_InflightStep] = None
+        # async-scheduling reconciliation counters: segments killed because
+        # their request finished while speculatively planned, and pages
+        # rolled back from those speculative +1 commitments
+        self.spec_kills = 0
+        self.spec_rollback_pages = 0
 
     # ------------------------------------------------- baseline semantics
     def _apply_baseline_semantics(self):
@@ -146,16 +200,18 @@ class Engine:
 
     # ---------------------------------------------------------------- step
     def step(self) -> Optional[StepMetrics]:
+        if self.async_scheduling:
+            return self._step_async()
         if not self.scheduler.has_work():
             return None
+        t0 = time.perf_counter()
         plan = self.scheduler.schedule()
         # state restores of this step's admissions: one batched dispatch
         self.runner.apply_copies(plan.copy_ops)
+        # scheduling counts as host build time (async hides it too)
+        build_ms = (time.perf_counter() - t0) * 1e3
+        disp_ms = 0.0
 
-        n_decodes = len(plan.decodes)
-        n_prefills = len(plan.prefills)
-        prefill_tokens = plan.prefill_tokens
-        batched_tokens = plan.total_tokens
         slots_before = self.runner.slots_dispatched
         if plan.scheduled:
             self._count_encoder_runs(plan.scheduled)
@@ -169,26 +225,141 @@ class Engine:
             packed = self.cfg.batching_mode == "packed"
             post_ops: List[StateCopyOp] = []
             for group in groups:
-                logits = self.runner.run_plan(
-                    self.params, [(s.req, s.num_tokens) for s in group],
+                tb = time.perf_counter()
+                prep = self.runner.prepare(
+                    [(s.req, s.num_tokens, s.start) for s in group],
                     packed=packed)
+                td = time.perf_counter()
+                build_ms += (td - tb) * 1e3
+                logits = self.runner.fetch(
+                    self.runner.dispatch(self.params, prep), len(group))
+                disp_ms += (time.perf_counter() - td) * 1e3
+                # sampling/advance below is neither build nor dispatch wait
                 for i, s in enumerate(group):
                     post_ops.extend(self._advance(s, logits[i]))
             # checkpoint copies emitted while advancing: one batched dispatch
             self.runner.apply_copies(post_ops)
 
+        return self._record_metrics(plan, slots_before, build_ms, disp_ms)
+
+    # ---------------------------------------------------------- async step
+    def _step_async(self) -> Optional[StepMetrics]:
+        """One double-buffered step: plan + host-build step N+1 (the part
+        the in-flight dispatch hides), THEN block on step N's logits,
+        sample/advance it, reconcile plan N+1 against what actually
+        happened (kill segments of requests that finished, roll back their
+        speculative pages, patch the now-known decode token ids), and
+        dispatch N+1 without waiting for it."""
+        inf, self._inflight = self._inflight, None
+        if not self.scheduler.has_work() and inf is None:
+            return None
+
+        # --- phase 1: plan step N+1 while step N executes on device
+        t0 = time.perf_counter()
+        inflight_toks: Dict[str, int] = {}
+        if inf is not None:
+            for i, s in enumerate(inf.plan.scheduled):
+                if inf.live[i]:
+                    inflight_toks[s.req.rid] = s.num_tokens
+        plan = self.scheduler.schedule(inflight=inflight_toks)
+        self.runner.apply_copies(plan.copy_ops)
+        prepared = None
+        if plan.scheduled:
+            self._count_encoder_runs(plan.scheduled)
+            prepared = self.runner.prepare(
+                [(s.req, s.num_tokens, s.start) for s in plan.scheduled],
+                packed=self.cfg.batching_mode == "packed")
+        build_ms = (time.perf_counter() - t0) * 1e3
+
+        # --- phase 2: complete step N (blocks on its logits)
+        done, wait_ms = self._complete(inf)
+
+        # --- phase 3: reconcile plan N+1 against step N's actual outcome
+        live = [True] * len(plan.scheduled)
+        seg_of = {s.req.rid: i for i, s in enumerate(plan.scheduled)}
+        for req in done:
+            si = seg_of.get(req.rid)
+            if si is not None:
+                # EOS'd while its speculative +1 decode was already planned:
+                # neutralize the segment and pop the page committed for the
+                # never-computed token before releasing the request.
+                prepared.kill_segment(si)
+                live[si] = False
+                self.spec_kills += 1
+                self.spec_rollback_pages += self.mgr.rollback_tokens(
+                    req.seq, req.seq.num_computed)
+            self._finish(req)
+        if prepared is not None:
+            for si in list(prepared.pending):
+                s = plan.scheduled[si]
+                prepared.patch_token(si, s.req.seq.tokens[s.start])
+
+        # --- phase 4: dispatch step N+1 (async; completes next call)
+        slots_before = self.runner.slots_dispatched
+        tokens_before = self.runner.tokens_dispatched
+        if prepared is not None and any(live):
+            epochs = [s.req.seq.epoch for s in plan.scheduled]
+            handle = self.runner.dispatch(self.params, prepared)
+            self._inflight = _InflightStep(plan, handle, epochs, live,
+                                           step=self.step_count)
+        return self._record_metrics(
+            plan, slots_before, build_ms, wait_ms,
+            tokens=self.runner.tokens_dispatched - tokens_before)
+
+    def _complete(self, inf: Optional[_InflightStep]):
+        """Fetch an in-flight step's logits and run its delayed
+        sample/advance. Segments whose request was preempted while in
+        flight (stale epoch) or killed at dispatch are skipped — recompute
+        preemption regenerates their tokens deterministically. Returns
+        (finished requests, ms blocked on the fetch) — finish itself is
+        deferred to the caller so it can reconcile the next plan first,
+        and only the device wait is timed (host bookkeeping after the
+        fetch is not dispatch latency)."""
+        if inf is None:
+            return [], 0.0
+        t0 = time.perf_counter()
+        logits = self.runner.fetch(inf.handle, len(inf.plan.scheduled))
+        wait_ms = (time.perf_counter() - t0) * 1e3
+        done: List[Request] = []
+        post_ops: List[StateCopyOp] = []
+        for i, s in enumerate(inf.plan.scheduled):
+            req, seq = s.req, s.req.seq
+            if not inf.live[i] or req.status != Status.RUNNING \
+                    or seq.epoch != inf.epochs[i] \
+                    or seq.num_computed != s.start:
+                continue
+            # stamp with the COMPLETED step's index, not the current call's
+            # (sync records the sampling step; async samples one call later)
+            post_ops.extend(self._advance(s, logits[i], done=done,
+                                          step=inf.step))
+        self.runner.apply_copies(post_ops)
+        return done, wait_ms
+
+    def _record_metrics(self, plan: StepPlan, slots_before: int,
+                        build_ms: float, disp_ms: float,
+                        tokens: Optional[int] = None) -> StepMetrics:
+        """``batched_tokens``/``dispatched_slots``/``pad_slots`` describe
+        what was actually DISPATCHED (async: killed speculative segments'
+        tokens drop out and their slots count as padding waste; a fully
+        killed plan dispatches nothing); ``decode_batch``/``num_prefills``/
+        ``prefill_tokens`` describe the PLAN as scheduled."""
         stats = self.mgr.memory_stats()
+        slots = self.runner.slots_dispatched - slots_before
+        tokens = plan.total_tokens if tokens is None else tokens
         m = StepMetrics(
             step=self.step_count,
-            decode_batch=n_decodes,
-            prefill_tokens=prefill_tokens,
+            decode_batch=len(plan.decodes),
+            prefill_tokens=plan.prefill_tokens,
             used_units=stats.used_units,
             evictable_units=stats.evictable_units,
             empty_units=stats.empty_units,
             free_units=stats.free_units,
-            num_prefills=n_prefills,
-            batched_tokens=batched_tokens,
-            dispatched_slots=self.runner.slots_dispatched - slots_before,
+            num_prefills=len(plan.prefills),
+            batched_tokens=tokens,
+            dispatched_slots=slots,
+            pad_slots=max(0, slots - tokens),
+            host_build_ms=build_ms,
+            dispatch_ms=disp_ms,
         )
         self.metrics.append(m)
         self.step_count += 1
@@ -199,7 +370,7 @@ class Engine:
             return
         for s in scheduled:
             seq = s.req.seq
-            if not s.is_prefill or seq.num_computed != 0:
+            if not s.is_prefill or s.start != 0:
                 continue
             for it in (seq.mm_items or seq.encoder_items):
                 if it.mm_hash not in self.mm_seen or not \
@@ -207,12 +378,18 @@ class Engine:
                     self.encoder_runs += 1
                     self.mm_seen.add(it.mm_hash)
 
-    def _advance(self, s: ScheduledSeq, logits: np.ndarray
-                 ) -> List[StateCopyOp]:
+    def _advance(self, s: ScheduledSeq, logits: np.ndarray,
+                 done: Optional[List[Request]] = None,
+                 step: Optional[int] = None) -> List[StateCopyOp]:
         """Post-dispatch bookkeeping for one scheduled sequence: record the
         computed tokens with the manager, sample once past the prompt, and
-        return any state-checkpoint copy ops for batched execution."""
+        return any state-checkpoint copy ops for batched execution. With
+        ``done`` given (async), finish detection is deferred to the caller
+        instead of retiring the request immediately; ``step`` overrides the
+        step index stamped on first tokens/finishes (async completes step N
+        during call N+1 — stamps must match the synchronous loop's)."""
         req, seq = s.req, s.req.seq
+        step = self.step_count if step is None else step
         ops = self.mgr.advance(seq, s.num_tokens)
         if s.is_prefill:    # vision free-on-consume only fires during prefill
             self.mgr.consume_mm(seq, seq.num_computed)
@@ -222,8 +399,13 @@ class Engine:
             req.output.append(tok)
             seq.append_token(tok)
             if req.first_token_step is None:
-                req.first_token_step = self.step_count
-            self._maybe_finish(req)
+                req.first_token_step = step
+            if req.is_done():
+                if done is None:
+                    self._finish(req)
+                else:
+                    req.finished_step = step
+                    done.append(req)
         return ops
 
     def _sample(self, req: Request, logits: np.ndarray) -> int:
@@ -238,15 +420,18 @@ class Engine:
         p /= p.sum()
         return int(rng.choice(v, p=p))
 
-    def _maybe_finish(self, req: Request) -> None:
-        if req.is_done():
+    def _finish(self, req: Request) -> None:
+        if req.finished_step is None:   # async stamps at completion time
             req.finished_step = self.step_count
-            self.scheduler.finish(req, cache=True)
-            self.runner.forget(req.rid)
-            self.finished.append(req)
+        self.scheduler.finish(req, cache=True)
+        self.runner.forget(req.rid)
+        self.finished.append(req)
 
     # ----------------------------------------------------------------- run
     def run_until_done(self, max_steps: int = 10_000) -> List[Request]:
-        while self.scheduler.has_work() and self.step_count < max_steps:
+        """Drive steps until every request finished (draining the in-flight
+        step on shutdown) or ``max_steps`` is hit."""
+        while (self.scheduler.has_work() or self._inflight is not None) \
+                and self.step_count < max_steps:
             self.step()
         return self.finished

@@ -21,12 +21,32 @@ of two layouts:
   the ``(B=_pow2(n), T=_pow2(max_chunk))`` bucket with SENTINEL positions
   at pads — per-step FLOPs scale with B*T, not with the token budget.
 
+``run_plan`` is three phases the async engine drives separately:
+
+  * ``prepare`` builds the whole batch as HOST numpy (``PreparedStep``) —
+    this is the part double-buffering hides behind the previous step's
+    in-flight dispatch. Decode items whose token id is not sampled yet
+    (async speculative scheduling: the in-flight step produces it) are
+    recorded in ``PreparedStep.pending`` and patched in later.
+  * ``dispatch`` uploads, zeroes fresh pages, and issues the jitted
+    ``serve_step`` without blocking (JAX async dispatch); it returns the
+    device logits handle.
+  * ``fetch`` blocks on the handle and returns per-segment logits rows.
+
+``PreparedStep.kill_segment`` neutralizes one segment to pad semantics
+(used when a speculatively scheduled request turns out to have finished at
+the in-flight step): its tokens become pads (segment id -1, SENTINEL
+positions), its KV/state writes drop (-1 exec ids), its logits row is
+garbage the caller discards. The packed scan/attention math is keyed
+entirely on segment-id equality, so an interior pad run is as inert as the
+tail pads every dispatch already carries.
+
 Host-side cost model: per-request block tables are kept as persistent
-numpy mirrors updated incrementally from the manager's append/free deltas
-(``SequenceState.freed_events`` + table length), instead of re-walking
-O(pages) python lists per request per step. All ``StateCopyOp``s of a step
-phase execute as one batched gather/scatter dispatch per KV type instead of
-one jit call per op.
+numpy mirrors updated incrementally from the manager's append/free/trim
+deltas (``SequenceState.freed_events`` / ``trim_events`` + table length),
+instead of re-walking O(pages) python lists per request per step. All
+``StateCopyOp``s of a step phase execute as one batched gather/scatter
+dispatch per KV type instead of one jit call per op.
 """
 from __future__ import annotations
 
@@ -63,15 +83,100 @@ def _tok_bucket(n: int) -> int:
     return 16 * (-(-n // 16))
 
 
+def _norm_items(items) -> List[Tuple[Request, int, int]]:
+    """Normalize plan items to (request, num_tokens, start): 2-tuples keep
+    the synchronous default ``start = seq.num_computed``; the async engine
+    passes explicit starts that run ahead of ``num_computed`` while the
+    previous step is still in flight."""
+    out = []
+    for it in items:
+        r, nt = it[0], it[1]
+        start = it[2] if len(it) > 2 and it[2] >= 0 else r.seq.num_computed
+        out.append((r, nt, start))
+    return out
+
+
+@dataclasses.dataclass
+class PreparedStep:
+    """One plan's device batch, still host-side numpy (phase 1 of 3).
+
+    ``pending`` lists segment indices whose (single) decode token id was
+    not known at build time — the in-flight step samples it; the engine
+    calls ``patch_token`` once the sample lands, or ``kill_segment`` if
+    the request turned out to have finished instead."""
+
+    arrs: Dict[str, object]           # DecodeBatch field -> numpy / dict
+    info: dict
+    items: List[Tuple[Request, int, int]]
+    packed: bool
+    pending: List[int]
+    dead: set = dataclasses.field(default_factory=set)
+
+    @property
+    def n(self) -> int:
+        return self.info["n"]
+
+    def patch_token(self, si: int, tok: int) -> None:
+        """Fill segment ``si``'s (single) decode token id."""
+        if self.packed:
+            off, nt = self.info["seg_off"][si]
+            assert nt == 1, (si, nt)
+            self.arrs["tokens"][0, off] = tok
+        else:
+            self.arrs["tokens"][si, 0] = tok
+        if si in self.pending:
+            self.pending.remove(si)
+
+    def kill_segment(self, si: int) -> None:
+        """Neutralize segment ``si`` to pad semantics: the request finished
+        at the in-flight step, so its speculative slot must compute nothing
+        and write nowhere. Its logits row becomes garbage (the engine skips
+        it); no live token can see a pad, so the other segments' outputs
+        are bit-identical with or without the dead slot."""
+        self.dead.add(si)
+        if si in self.pending:
+            self.pending.remove(si)
+        a = self.arrs
+        if self.packed:
+            off, nt = self.info["seg_off"][si]
+            sl = slice(off, off + nt)
+            a["tokens"][0, sl] = 0
+            a["positions"][0, sl] = SENTINEL_POS
+            a["seg_ids"][0, sl] = -1
+            a["chunk_start"][0, sl] = SENTINEL_POS
+            if a["mm_mask"] is not None:
+                a["mm_mask"][0, sl] = False
+            for v in a["write_eids"].values():
+                v[0, 0, 0, sl] = -1
+            for v in a["page_seg"].values():
+                np.place(v, v == si, -2)
+        else:
+            a["tokens"][si, :] = 0
+            a["positions"][si, :] = SENTINEL_POS
+            a["seq_lens"][si] = 1
+            a["last_idx"][si] = 0
+            if a["mm_mask"] is not None:
+                a["mm_mask"][si, :] = False
+            for v in a["write_eids"].values():
+                v[0, 0, si, :] = -1
+            for v in a["tables"].values():
+                v[0, 0, si, :] = -1
+            for v in a["page_pos"].values():
+                v[0, 0, si, :] = SENTINEL_POS
+        for v in a["state_eids"].values():
+            v[0, si] = -1
+
+
 class _SeqMirror:
     """Persistent per-request device-batch state: block-table + slot-position
     arrays per KV type, grown geometrically and patched from manager deltas."""
 
-    __slots__ = ("epoch", "evt_cursor", "table", "pos", "n")
+    __slots__ = ("epoch", "evt_cursor", "trim_cursor", "table", "pos", "n")
 
     def __init__(self, epoch: int):
         self.epoch = epoch
         self.evt_cursor = 0
+        self.trim_cursor = 0
         self.table: Dict[str, np.ndarray] = {}
         self.pos: Dict[str, np.ndarray] = {}
         self.n: Dict[str, int] = {}
@@ -100,7 +205,15 @@ class ModelRunner:
         big = _lcm([s.page_units for s in self.specs.values()])
         units = manager.geometry.total_units + big   # + scratch page
         self.buffer = jnp.zeros((1, 1, units), jnp.bfloat16)
-        self._steps: Dict = {}
+        # serve-step jit cache, shared across ALL runners of one model:
+        # the cache pins the static ``prefill`` flag per bucket key, and
+        # jax.jit itself retraces per input shape, so runners over pools of
+        # different sizes coexist safely. Engines are recreated freely in
+        # tests/benchmarks (A/B over batching modes, async vs sync) —
+        # without sharing, every engine would recompile every bucket.
+        if not hasattr(model, "_serve_jit_cache"):
+            model._serve_jit_cache = {}
+        self._steps: Dict = model._serve_jit_cache
         self._copy_fn = None
         self._zero_fn = None
         self._batch_copy_fns: Dict = {}
@@ -120,7 +233,9 @@ class ModelRunner:
     def _mirror(self, seq: SequenceState) -> _SeqMirror:
         """Sync this sequence's mirror from the manager's deltas: new table
         entries are appended, freed entries patched from ``freed_events``,
-        and a stale ``epoch`` (free/preemption) forces a rebuild."""
+        trailing pops clamped from ``trim_events`` (speculative rollback —
+        no epoch bump, so the cursors survive), and a stale ``epoch``
+        (free/preemption) forces a rebuild."""
         m = self._mirrors.get(seq.rid)
         if m is None or m.epoch != seq.epoch:
             m = _SeqMirror(seq.epoch)
@@ -130,6 +245,10 @@ class ModelRunner:
                 m.table[name][idx] = -1
                 m.pos[name][idx] = SENTINEL_POS
         m.evt_cursor = len(seq.freed_events)
+        for name, new_len in seq.trim_events[m.trim_cursor:]:
+            if new_len < m.n.get(name, 0):
+                m.n[name] = new_len
+        m.trim_cursor = len(seq.trim_events)
         for name, spec in self._table_specs.items():
             entries = seq.page_tables.get(name)
             if not entries:
@@ -153,19 +272,29 @@ class ModelRunner:
 
     # ------------------------------------------- shared per-item builders
     def _mm_enc_flags(self, items) -> Tuple[bool, bool]:
+        """Whether this batch carries mm-embed / encoder fields. Keyed on
+        each item's chunk START, not ``req.in_prefill`` — under async
+        scheduling ``num_computed`` lags the in-flight step, and a
+        speculative first decode built while the final prefill chunk is in
+        flight must produce the SAME batch fields (and jit key) as the
+        synchronous loop would."""
         cfg = self.model.cfg
         has_mm = cfg.family == "vlm" and any(
-            r.in_prefill for r, _ in items)
+            start < len(r.prompt) for r, _, start in items)
         has_enc = cfg.family == "encdec" and any(
-            r.in_prefill and r.seq.num_computed == 0 for r, _ in items)
+            start == 0 for r, _, start in items)
         return has_mm, has_enc
 
-    def _fresh_state_of(self, seq: SequenceState) -> List[Tuple[str, int]]:
+    def _fresh_state_of(self, seq: SequenceState, start: int
+                        ) -> List[Tuple[str, int]]:
         """A request's very first chunk must see zero recurrent state; its
         freshly allocated state pages hold whatever bytes last lived in
         those units (prefix-cache restores land at start > 0, so they are
-        never clobbered here)."""
-        if seq.num_computed != 0:
+        never clobbered here). Under async scheduling the chunk START, not
+        ``num_computed``, decides — a continuation chunk built while the
+        first chunk is still in flight must NOT re-zero the state the
+        in-flight chunk is writing."""
+        if start != 0:
             return []
         return [(name, seq.state_pages[name])
                 for name in self._state_specs if name in seq.state_pages]
@@ -204,26 +333,48 @@ class ModelRunner:
                 enc_write[0, 0, row, j] = ctab[pg]
 
     # ----------------------------------------------------------- batching
-    def build_plan(self, items: Sequence[Tuple[Request, int]],
-                   packed: bool = True) -> Tuple[DecodeBatch, dict]:
-        """Flatten one scheduler step — ``items`` is [(request, num_tokens)]
-        with ragged per-sequence token counts — into a device batch:
-        token-packed stream (default) or padded (B, T) rows.
-        Returns (batch, info)."""
+    def prepare(self, items, packed: bool = True) -> PreparedStep:
+        """Phase 1: flatten one scheduler step — ``items`` is
+        [(request, num_tokens[, start])] with ragged per-sequence token
+        counts — into a HOST-side device batch: token-packed stream
+        (default) or padded (B, T) rows."""
+        items = _norm_items(items)
         if packed:
-            return self._build_plan_packed(items)
-        return self._build_plan_padded(items)
+            arrs, info = self._build_host_packed(items)
+        else:
+            arrs, info = self._build_host_padded(items)
+        return PreparedStep(arrs=arrs, info=info, items=items, packed=packed,
+                            pending=info.pop("pending"))
 
-    def _build_plan_padded(self, items: Sequence[Tuple[Request, int]]
-                           ) -> Tuple[DecodeBatch, dict]:
+    def build_plan(self, items, packed: bool = True
+                   ) -> Tuple[DecodeBatch, dict]:
+        """Build one plan's device batch (host build + upload). Kept for
+        direct layout inspection; the engine drives prepare/dispatch/fetch
+        separately."""
+        prep = self.prepare(items, packed=packed)
+        return self._to_batch(prep.arrs), prep.info
+
+    @staticmethod
+    def _to_batch(arrs: Dict[str, object]) -> DecodeBatch:
+        def conv(v):
+            if v is None:
+                return None
+            if isinstance(v, dict):
+                return {k: jnp.asarray(x) for k, x in v.items()}
+            return jnp.asarray(v)
+
+        return DecodeBatch(**{f: conv(v) for f, v in arrs.items()})
+
+    def _build_host_padded(self, items: Sequence[Tuple[Request, int, int]]
+                           ) -> Tuple[Dict[str, object], dict]:
         """PR-1 layout: one row per sequence padded to the (B, T) bucket.
         Padded slots get SENTINEL positions (never attended), padded rows
         get -1 exec ids (writes dropped)."""
         n = len(items)
         assert n > 0
         B = _pow2(n)
-        T = _pow2(max(nt for _, nt in items))
-        mirrors = [self._mirror(r.seq) for r, _ in items]
+        T = _pow2(max(nt for _, nt, _ in items))
+        mirrors = [self._mirror(r.seq) for r, _, _ in items]
         p_need: Dict[str, int] = {}
         for name in self._table_specs:
             longest = 1
@@ -257,11 +408,13 @@ class ModelRunner:
                 enc_write = np.full((1, 1, B, cfg.encoder_seq), -1, np.int32)
 
         fresh_state: List[Tuple[str, int]] = []
-        for bi, ((r, t_real), m) in enumerate(zip(items, mirrors)):
+        pending: List[int] = []
+        for bi, ((r, t_real, start), m) in enumerate(zip(items, mirrors)):
             seq = r.seq
-            start = seq.num_computed
-            fresh_state.extend(self._fresh_state_of(seq))
+            fresh_state.extend(self._fresh_state_of(seq, start))
             toks = seq.tokens[start:start + t_real]
+            if len(toks) < t_real:      # speculative decode: token patched in
+                pending.append(bi)
             tokens[bi, :len(toks)] = toks
             positions[bi, :t_real] = np.arange(start, start + t_real)
             seq_lens[bi] = start + t_real
@@ -290,32 +443,26 @@ class ModelRunner:
         if has_mm:
             mrope = np.broadcast_to(positions[None], (3, B, T)).copy()
 
-        batch = DecodeBatch(
-            tokens=jnp.asarray(tokens), positions=jnp.asarray(positions),
-            seq_lens=jnp.asarray(seq_lens),
-            tables={k: jnp.asarray(v) for k, v in tables.items()},
-            page_pos={k: jnp.asarray(v) for k, v in page_pos.items()},
-            write_eids={k: jnp.asarray(v) for k, v in write_eids.items()},
-            state_eids={k: jnp.asarray(v) for k, v in state_eids.items()},
-            mm_embeds=None if mm_embeds is None else jnp.asarray(mm_embeds),
-            mm_mask=None if mm_mask is None else jnp.asarray(mm_mask),
-            mrope_pos=None if mrope is None else jnp.asarray(mrope),
-            last_idx=jnp.asarray(last_idx),
-            enc_embeds=None if enc_embeds is None else jnp.asarray(enc_embeds),
-            enc_write_eids=None if enc_write is None else jnp.asarray(enc_write),
-            enc_lens=None if enc_lens is None else jnp.asarray(enc_lens),
-        )
+        arrs = dict(
+            tokens=tokens, positions=positions, seq_lens=seq_lens,
+            tables=tables, page_pos=page_pos, write_eids=write_eids,
+            state_eids=state_eids, mm_embeds=mm_embeds, mm_mask=mm_mask,
+            mrope_pos=mrope, last_idx=last_idx, enc_embeds=enc_embeds,
+            enc_write_eids=enc_write, enc_lens=enc_lens,
+            seg_ids=None, chunk_start=None, seg_start_tok=None,
+            seg_last_tok=None, page_seg=None)
         # T==1 buckets take the cheap materialized decode path; any larger
         # bucket (or an encoder run) uses the chunked prefill path. Both are
         # exact for every row thanks to position-based masking.
         prefill = T > 1 or has_enc
         key = (prefill, B, T, tuple(sorted(p_need.items())), has_mm, has_enc)
-        return batch, {"key": key, "n": n, "prefill": prefill,
-                       "fresh_state": fresh_state,
-                       "tokens": sum(nt for _, nt in items), "slots": B * T}
+        return arrs, {"key": key, "n": n, "prefill": prefill,
+                      "fresh_state": fresh_state, "pending": pending,
+                      "tokens": sum(nt for _, nt, _ in items),
+                      "slots": B * T}
 
-    def _build_plan_packed(self, items: Sequence[Tuple[Request, int]]
-                           ) -> Tuple[DecodeBatch, dict]:
+    def _build_host_packed(self, items: Sequence[Tuple[Request, int, int]]
+                           ) -> Tuple[Dict[str, object], dict]:
         """Token-packed layout: flatten the whole step into ONE
         ``(TT,)`` token stream (TT = ``_tok_bucket(total_tokens)``) with
         per-token segment ids / positions / chunk starts / KV write
@@ -325,19 +472,19 @@ class ModelRunner:
         carry segment id -2 — pads never match anything."""
         n = len(items)
         assert n > 0
-        total = sum(nt for _, nt in items)
+        total = sum(nt for _, nt, _ in items)
         TT = _tok_bucket(total)
         S = _pow2(n)                                  # segment bucket
-        mirrors = [self._mirror(r.seq) for r, _ in items]
+        mirrors = [self._mirror(r.seq) for r, _, _ in items]
         p_need: Dict[str, int] = {}                   # flat page-stream cap
         for name in self._table_specs:
             p_need[name] = _pow2(
                 max(1, sum(m.n.get(name, 0) for m in mirrors)), 4)
-        tokens = np.zeros((TT,), np.int32)
-        positions = np.full((TT,), SENTINEL_POS, np.int32)
-        seg_ids = np.full((TT,), -1, np.int32)
-        chunk_start = np.full((TT,), SENTINEL_POS, np.int32)
-        seg_start_tok = np.zeros((TT,), np.int32)
+        tokens = np.zeros((1, TT), np.int32)
+        positions = np.full((1, TT), SENTINEL_POS, np.int32)
+        seg_ids = np.full((1, TT), -1, np.int32)
+        chunk_start = np.full((1, TT), SENTINEL_POS, np.int32)
+        seg_start_tok = np.zeros((1, TT), np.int32)
         seg_last_tok = np.zeros((S,), np.int32)
         seq_lens = np.ones((S,), np.int32)
         tables = {k: np.full((1, 1, 1, p), -1, np.int32)
@@ -365,18 +512,22 @@ class ModelRunner:
                 enc_write = np.full((1, 1, S, cfg.encoder_seq), -1, np.int32)
 
         fresh_state: List[Tuple[str, int]] = []
+        pending: List[int] = []
+        seg_off: List[Tuple[int, int]] = []
         page_cursor = {name: 0 for name in p_need}
         off = 0
-        for si, ((r, t_real), m) in enumerate(zip(items, mirrors)):
+        for si, ((r, t_real, start), m) in enumerate(zip(items, mirrors)):
             seq = r.seq
-            start = seq.num_computed
-            fresh_state.extend(self._fresh_state_of(seq))
+            fresh_state.extend(self._fresh_state_of(seq, start))
+            seg_off.append((off, t_real))
             toks = seq.tokens[start:start + t_real]
-            tokens[off:off + len(toks)] = toks
-            positions[off:off + t_real] = np.arange(start, start + t_real)
-            seg_ids[off:off + t_real] = si
-            chunk_start[off:off + t_real] = start
-            seg_start_tok[off:off + t_real] = off
+            if len(toks) < t_real:      # speculative decode: token patched in
+                pending.append(si)
+            tokens[0, off:off + len(toks)] = toks
+            positions[0, off:off + t_real] = np.arange(start, start + t_real)
+            seg_ids[0, off:off + t_real] = si
+            chunk_start[0, off:off + t_real] = start
+            seg_start_tok[0, off:off + t_real] = off
             seg_last_tok[si] = off + t_real - 1
             seq_lens[si] = start + t_real
             for name, spec in self._table_specs.items():
@@ -405,42 +556,36 @@ class ModelRunner:
                     self._fill_encoder(seq, m, enc_embeds, enc_write, si)
             off += t_real
         if has_mm:
-            mrope = np.broadcast_to(positions[None, None], (3, 1, TT)).copy()
+            mrope = np.broadcast_to(positions[None], (3, 1, TT)).copy()
 
-        batch = DecodeBatch(
-            tokens=jnp.asarray(tokens[None]),
-            positions=jnp.asarray(positions[None]),
-            seq_lens=jnp.asarray(seq_lens),
-            tables={k: jnp.asarray(v) for k, v in tables.items()},
-            page_pos={k: jnp.asarray(v) for k, v in page_pos.items()},
-            write_eids={k: jnp.asarray(v) for k, v in write_eids.items()},
-            state_eids={k: jnp.asarray(v) for k, v in state_eids.items()},
-            mm_embeds=None if mm_embeds is None else jnp.asarray(mm_embeds),
-            mm_mask=None if mm_mask is None else jnp.asarray(mm_mask),
-            mrope_pos=None if mrope is None else jnp.asarray(mrope),
-            last_idx=None,
-            enc_embeds=None if enc_embeds is None else jnp.asarray(enc_embeds),
-            enc_write_eids=None if enc_write is None else jnp.asarray(enc_write),
-            enc_lens=None if enc_lens is None else jnp.asarray(enc_lens),
-            seg_ids=jnp.asarray(seg_ids[None]),
-            chunk_start=jnp.asarray(chunk_start[None]),
-            seg_start_tok=jnp.asarray(seg_start_tok[None]),
-            seg_last_tok=jnp.asarray(seg_last_tok),
-            page_seg={k: jnp.asarray(v) for k, v in page_seg.items()},
-        )
+        arrs = dict(
+            tokens=tokens, positions=positions, seq_lens=seq_lens,
+            tables=tables, page_pos=page_pos, write_eids=write_eids,
+            state_eids=state_eids, mm_embeds=mm_embeds, mm_mask=mm_mask,
+            mrope_pos=mrope, last_idx=None, enc_embeds=enc_embeds,
+            enc_write_eids=enc_write, enc_lens=enc_lens,
+            seg_ids=seg_ids, chunk_start=chunk_start,
+            seg_start_tok=seg_start_tok, seg_last_tok=seg_last_tok,
+            page_seg=page_seg)
         key = ("packed", S, TT, tuple(sorted(p_need.items())),
                has_mm, has_enc)
-        return batch, {"key": key, "n": n, "prefill": True,
-                       "fresh_state": fresh_state,
-                       "tokens": total, "slots": TT}
+        return arrs, {"key": key, "n": n, "prefill": True,
+                      "fresh_state": fresh_state, "pending": pending,
+                      "seg_off": seg_off, "tokens": total, "slots": TT}
 
     # ----------------------------------------------------------------- run
-    def run_plan(self, params, items: Sequence[Tuple[Request, int]],
-                 packed: bool = True) -> np.ndarray:
-        """Execute one mixed step plan in a single jitted dispatch. Returns
-        last-token logits, one row per item, in plan order."""
-        batch, info = self.build_plan(items, packed=packed)
-        self.tokens_dispatched += info["tokens"]
+    def dispatch(self, params, prep: PreparedStep):
+        """Phase 2: upload the prepared batch, zero freshly allocated pages,
+        and issue the jitted ``serve_step``. Returns the device logits
+        handle WITHOUT blocking (JAX async dispatch) — the device computes
+        while the host schedules and builds the next plan."""
+        info = prep.info
+        assert not prep.pending, \
+            f"segments {prep.pending} still await their decode token"
+        # killed segments' tokens are pads now — count their slots as paid
+        # (slots) but not as useful work (tokens): they ARE dispatch waste
+        dead_tokens = sum(prep.items[si][1] for si in prep.dead)
+        self.tokens_dispatched += info["tokens"] - dead_tokens
         self.slots_dispatched += info["slots"]
         self.dispatch_count += 1
         self.zero_pages(self.mgr.drain_fresh_pages())
@@ -453,8 +598,20 @@ class ModelRunner:
                                  prefill=info["prefill"]),
                          donate_argnums=(1,))
             self._steps[key] = fn
-        logits, self.buffer = fn(params, self.buffer, batch)
-        return np.asarray(logits[:info["n"]], np.float32)
+        logits, self.buffer = fn(params, self.buffer, self._to_batch(prep.arrs))
+        return logits
+
+    def fetch(self, handle, n: int) -> np.ndarray:
+        """Phase 3: block on a dispatched step's logits; one row per
+        segment, in plan order."""
+        return np.asarray(handle[:n], np.float32)
+
+    def run_plan(self, params, items, packed: bool = True) -> np.ndarray:
+        """Execute one mixed step plan in a single jitted dispatch
+        (prepare + dispatch + fetch back to back — the synchronous path).
+        Returns last-token logits, one row per item, in plan order."""
+        prep = self.prepare(items, packed=packed)
+        return self.fetch(self.dispatch(params, prep), prep.n)
 
     # ------------------------------------------------------------- copies
     def apply_copies(self, ops: Sequence[StateCopyOp]) -> None:

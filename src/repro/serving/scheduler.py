@@ -15,16 +15,37 @@ level). On failure the scheduler preempts the latest-arrival running
 request (vLLM recompute preemption) — preferring victims outside the plan,
 then shrinking the plan itself — and retries.
 
+ASYNC SCHEDULING (``Engine`` double-buffering): ``schedule(inflight=...)``
+plans the NEXT step while the previous one is still executing on the
+device. ``inflight`` maps request id -> tokens the in-flight step is
+computing; packing uses the EFFECTIVE position ``num_computed + inflight``
+(vLLM async-scheduling style):
+
+  * an in-flight prefill chunk continues from its effective end;
+  * a request whose prompt completes in flight is speculatively scheduled
+    as a decode of the token the in-flight step is about to sample — its
+    token id is patched into the prepared batch when the logits land, and
+    its +1 page commitment is rolled back (``mgr.rollback_tokens``) if the
+    sample turns out to be EOS;
+  * a request whose in-flight sample deterministically exhausts
+    ``max_new_tokens`` is not schedulable — it WILL finish.
+
+Preempting a request with tokens in flight releases its pages WITHOUT
+caching (``preempt_request(cache=False)``): the device is still mutating
+its live recurrent state past the position the boundary hash describes,
+so caching would poison later prefix hits.
+
 ``serial=True`` reproduces the legacy one-prefill-chunk-per-step schedule
 (no token budget, decodes unbudgeted); the engine then issues prefill and
 decode as separate dispatches. It exists for A/B step-count comparisons and
-for the mixed-vs-serial determinism tests.
+for the mixed-vs-serial determinism tests. Serial mode is never driven
+with ``inflight`` (the engine falls back to the synchronous loop).
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 from ..core.manager import JengaKVCacheManager, StateCopyOp
 from .request import Request, Status
@@ -32,6 +53,14 @@ from .request import Request, Status
 
 @dataclasses.dataclass
 class SchedulerConfig:
+    """Packing knobs for one engine step.
+
+    Interactions with ``EngineConfig``: ``serial`` mirrors
+    ``batching_mode="serial"`` (legacy one-prefill-per-step schedule) and
+    is incompatible with async double-buffering — the engine silently runs
+    the synchronous loop for it; ``"packed"``/``"padded"`` layouts both
+    support ``async_scheduling`` (the layout only changes how the runner
+    flattens the plan, not how it is scheduled)."""
     max_running: int = 16
     chunk_size: int = 64            # serial-mode prefill chunk size
     max_num_batched_tokens: int = 256   # per-step mixed-batch token budget
@@ -48,12 +77,15 @@ class SchedulerConfig:
 @dataclasses.dataclass
 class ScheduledSeq:
     """One request's share of a step: compute ``num_tokens`` tokens starting
-    at ``req.seq.num_computed`` (1 for decodes, a chunk for prefills).
+    at position ``start`` (1 for decodes, a chunk for prefills).
     ``is_prefill`` is snapshotted at schedule time (advancing the sequence
-    flips ``req.in_prefill`` before step metrics are read)."""
+    flips ``req.in_prefill`` before step metrics are read). ``start``
+    equals ``seq.num_computed`` for synchronous plans and runs ahead of it
+    by the in-flight token count under async scheduling."""
     req: Request
     num_tokens: int
     is_prefill: bool = False
+    start: int = -1
 
 
 @dataclasses.dataclass
@@ -95,6 +127,7 @@ class Scheduler:
         self.waiting: Deque[Request] = deque()
         self.running: List[Request] = []
         self.preemption_count = 0
+        self._inflight_rids: frozenset = frozenset()
 
     def add(self, req: Request) -> None:
         self.waiting.append(req)
@@ -103,7 +136,10 @@ class Scheduler:
         return bool(self.waiting or self.running)
 
     # ------------------------------------------------------------ schedule
-    def schedule(self) -> StepPlan:
+    def schedule(self, inflight: Optional[Dict[str, int]] = None) -> StepPlan:
+        inflight = inflight or {}
+        self._inflight_rids = frozenset(inflight)
+
         # 1) admit new requests while capacity allows; begin_request acquires
         #    prefix-cache hits and may emit state-restore copy ops.
         admit_ops: List[Tuple[Request, StateCopyOp]] = []
@@ -119,16 +155,33 @@ class Scheduler:
             req.status = Status.RUNNING
             self.running.append(req)
 
+        def c_eff(req: Request) -> int:
+            """Effective computed position: what the request will have once
+            the in-flight step lands."""
+            return req.seq.num_computed + inflight.get(req.rid, 0)
+
+        def will_finish(req: Request) -> bool:
+            """The in-flight step deterministically samples this request's
+            last allowed token (max_new_tokens) — it cannot take more work.
+            EOS finishes are NOT predictable; those are speculatively
+            scheduled and reconciled by the engine (segment kill + page
+            rollback)."""
+            return (req.rid in inflight and c_eff(req) >= len(req.prompt)
+                    and req.num_generated + 1 >= req.sampling.max_new_tokens)
+
+        schedulable = [r for r in self.running if not will_finish(r)]
+
         # 2) pack candidates under the token budget: decodes first (they are
         #    latency-critical and cheap), then prefill chunks FIFO.
         budget = self.cfg.max_num_batched_tokens
         cands: List[ScheduledSeq] = []
-        for req in self.running:
-            if req.in_prefill:
-                continue
+        for req in schedulable:
+            if c_eff(req) < len(req.prompt):
+                continue                # still prefilling (effectively)
             if not self.cfg.serial and budget <= 0:
                 break               # budget exhausted; rest run next step
-            cands.append(ScheduledSeq(req, 1, is_prefill=False))
+            cands.append(ScheduledSeq(req, 1, is_prefill=False,
+                                      start=c_eff(req)))
             budget -= 1
         # Prefill packing is DEPTH-first: the oldest prefill takes as much
         # of the remaining budget as its prompt needs, then the next, ...
@@ -142,16 +195,17 @@ class Scheduler:
         p_budget = budget
         if self.cfg.max_prefill_tokens_per_step is not None:
             p_budget = min(p_budget, self.cfg.max_prefill_tokens_per_step)
-        for req in self.running:
-            if not req.in_prefill:
+        for req in schedulable:
+            ce = c_eff(req)
+            if ce >= len(req.prompt):
                 continue
             if self.cfg.serial and n_prefills >= 1:
                 break
             cap = self.cfg.chunk_size if self.cfg.serial else p_budget
-            chunk = min(cap, len(req.prompt) - req.seq.num_computed)
+            chunk = min(cap, len(req.prompt) - ce)
             if chunk <= 0:
                 break               # out of budget; later prefills wait
-            cands.append(ScheduledSeq(req, chunk, is_prefill=True))
+            cands.append(ScheduledSeq(req, chunk, is_prefill=True, start=ce))
             budget -= chunk
             p_budget -= chunk
             n_prefills += 1
@@ -164,7 +218,7 @@ class Scheduler:
         #    makes progress (no livelock under memory pressure).
         while cands:
             seqs = [c.req.seq for c in cands]
-            targets = [c.req.seq.num_computed + c.num_tokens for c in cands]
+            targets = [c.start + c.num_tokens for c in cands]
             if self.mgr.allocate_for_batch(seqs, targets):
                 break
             prefills = [c for c in cands if c.is_prefill]
@@ -182,26 +236,31 @@ class Scheduler:
 
         # 4) progress guarantee: if every candidate was deferred (all
         #    running requests hold pages but none can grow), the oldest
-        #    request gets its tokens by recompute-preempting latest-arrival
-        #    victims — otherwise mid-prefill requests deadlock the pool.
-        if not cands and self.running:
-            head = min(self.running, key=lambda r: r.arrival)
+        #    SCHEDULABLE request gets its tokens by recompute-preempting
+        #    latest-arrival victims — otherwise mid-prefill requests
+        #    deadlock the pool. (Requests that merely await their in-flight
+        #    completion are not starved — they need no allocation.)
+        schedulable = [r for r in schedulable if r.status == Status.RUNNING]
+        if not cands and schedulable:
+            head = min(schedulable, key=lambda r: r.arrival)
+            ce = c_eff(head)
             cap = (self.cfg.chunk_size if self.cfg.serial
                    else self.cfg.max_num_batched_tokens)
             if not self.cfg.serial and \
                     self.cfg.max_prefill_tokens_per_step is not None:
                 cap = min(cap, self.cfg.max_prefill_tokens_per_step)
-            nt = (min(cap, len(head.prompt) - head.seq.num_computed)
-                  if head.in_prefill else 1)
-            while not self.mgr.allocate_for_tokens(
-                    head.seq, head.seq.num_computed + nt):
+            nt = (min(cap, len(head.prompt) - ce)
+                  if ce < len(head.prompt) else 1)
+            while not self.mgr.allocate_for_tokens(head.seq, ce + nt):
                 victims = [r for r in self.running if r is not head]
                 if not victims:
                     self._preempt(head)   # a lone request that cannot fit
                     break
                 self._preempt(self._latest(victims))
             else:
-                cands = [ScheduledSeq(head, nt, is_prefill=head.in_prefill)]
+                cands = [ScheduledSeq(head, nt,
+                                      is_prefill=ce < len(head.prompt),
+                                      start=ce)]
 
         # restore ops of admissions that got preempted again in step 3 must
         # not run (their destination pages are already freed)
@@ -221,7 +280,10 @@ class Scheduler:
                                           order.get(id(key(it)), -1)))
 
     def _preempt(self, req: Request) -> None:
-        self.mgr.preempt_request(req.seq)
+        # an in-flight victim's device state runs ahead of its hash chains —
+        # releasing its pages to the prefix cache would poison later hits
+        self.mgr.preempt_request(req.seq,
+                                 cache=req.rid not in self._inflight_rids)
         req.preemptions += 1
         self.preemption_count += 1
         req.status = Status.WAITING

@@ -32,16 +32,29 @@ class SpecDecodeConfig:
     kv_pool_bytes: int = 64 << 20
     chunk_size: int = 32
     geometry_mode: str = "lcm"      # "max" reproduces vLLM-max (Fig. 19)
+    # Accepted for config parity with EngineConfig; speculative decoding
+    # EXPLICITLY FALLS BACK TO SYNC (see SpecDecodeEngine.async_fallback):
+    # the draft->verify loop is a hard lockstep data dependency — each
+    # draft token feeds the next draft step and the verify batch consumes
+    # all k of them — so a one-step-delayed sample would need a delayed
+    # verify queue with rollback across ROUNDS, not just steps. The engine
+    # records the fallback instead of silently ignoring the flag.
+    async_scheduling: bool = False
 
 
 class SpecDecodeEngine:
     """Single-sequence-at-a-time speculative decoding (functional case
-    study; the throughput comparison in benchmarks uses allocator replay)."""
+    study; the throughput comparison in benchmarks uses allocator replay).
+
+    ``cfg.async_scheduling`` is accepted but runs synchronously
+    (``async_fallback=True``): outputs are identical either way — the
+    flag only ever changes scheduling overlap, never semantics."""
 
     def __init__(self, target_model, draft_model, cfg: SpecDecodeConfig,
                  target_params=None, draft_params=None, seed=0):
         assert target_model.cfg.family in ("dense", "moe")
         assert draft_model.cfg.family == "dense"
+        self.async_fallback = bool(cfg.async_scheduling)
         target_model.kv_prefix = "tgt_"
         draft_model.kv_prefix = "draft_"
         self.tm, self.dm = target_model, draft_model

@@ -1,0 +1,25 @@
+"""Shared test helpers: one reduced model (+ params) per arch for the whole
+session. Engines are recreated freely across tests and A/B legs; sharing
+the model instance also shares its serve-step jit cache (see
+ModelRunner), which is most of the suite's wall-clock."""
+from repro.configs import ARCHS, reduced
+from repro.models.registry import build_model
+from repro.models.tp import single_device_dist
+from repro.serving import Engine, EngineConfig
+
+_MODELS = {}    # arch -> (model, cfg, params)
+
+
+def get_model(arch):
+    if arch not in _MODELS:
+        cfg = reduced(ARCHS[arch])
+        model = build_model(cfg, single_device_dist())
+        _MODELS[arch] = (model, cfg, model.init(0))
+    return _MODELS[arch]
+
+
+def make_engine(arch="granite-3-2b", **cfg_kw):
+    model, cfg, params = get_model(arch)
+    kw = dict(kv_pool_bytes=8 << 20, max_running=4, chunk_size=8)
+    kw.update(cfg_kw)
+    return Engine(model, EngineConfig(**kw), params=params), cfg

@@ -9,12 +9,7 @@ from repro.models.tp import single_device_dist
 from repro.serving import Engine, EngineConfig, Request, SamplingParams
 
 
-def make_engine(arch="granite-3-2b", **cfg_kw):
-    cfg = reduced(ARCHS[arch])
-    model = build_model(cfg, single_device_dist())
-    kw = dict(kv_pool_bytes=8 << 20, max_running=4, chunk_size=8)
-    kw.update(cfg_kw)
-    return Engine(model, EngineConfig(**kw)), cfg
+from conftest import make_engine
 
 
 def test_generate_greedy_deterministic():
@@ -105,6 +100,87 @@ def test_oom_preemption_recovers():
                            sampling=SamplingParams(max_new_tokens=4)))
     done = eng.run_until_done(max_steps=500)
     assert len(done) == 4, (len(done), eng.scheduler.preemption_count)
+
+
+def test_step_metrics_surface_dispatch_counters():
+    """StepMetrics surfaces the runner's dispatch-waste counters and the
+    overlap timings per step: tokens scheduled vs slots paid (pad_slots),
+    host batch-build ms, and device dispatch/fetch ms."""
+    eng, _ = make_engine(max_num_batched_tokens=64)
+    for i in range(3):
+        eng.submit(Request(rid=f"r{i}", prompt=list(range(12 + i)),
+                           sampling=SamplingParams(max_new_tokens=4)))
+    eng.run_until_done(max_steps=200)
+    ms = [m for m in eng.metrics if m.batched_tokens > 0]
+    assert ms
+    for m in ms:
+        assert m.dispatched_slots >= m.batched_tokens, m
+        assert m.pad_slots == m.dispatched_slots - m.batched_tokens, m
+        assert m.host_build_ms >= 0 and m.dispatch_ms >= 0, m
+    assert any(m.host_build_ms > 0 for m in ms)
+    assert any(m.dispatch_ms > 0 for m in ms)
+    # the per-step surface sums to the runner's totals (packed sync mode:
+    # one dispatch per step, every plan token dispatched)
+    assert sum(m.dispatched_slots for m in eng.metrics) == \
+        eng.runner.slots_dispatched
+    assert sum(m.batched_tokens for m in eng.metrics) == \
+        eng.runner.tokens_dispatched
+
+
+def test_step_metrics_async_records_overlap_timings():
+    """Async steps record the same surface: host build of plan N+1 plus the
+    time blocked fetching plan N's logits."""
+    eng, _ = make_engine(async_scheduling=True)
+    eng.submit(Request(rid="x", prompt=list(range(12)),
+                       sampling=SamplingParams(max_new_tokens=4)))
+    eng.run_until_done(max_steps=200)
+    assert eng.async_scheduling
+    ms = eng.metrics
+    assert any(m.host_build_ms > 0 for m in ms)
+    assert any(m.dispatch_ms > 0 for m in ms)       # fetch of step N
+    assert all(m.pad_slots >= 0 for m in ms)
+
+
+def test_rollback_tokens_mirror_trim_resync():
+    """Speculative rollback (async §5.4 access pattern): popping trailing
+    pages must not bump the epoch, and the runner mirror must re-sync by
+    trim events — including the shrink-then-regrow-to-same-length case,
+    where a length-only comparison would keep a stale tail."""
+    eng, _ = make_engine()
+    eng.submit(Request(rid="x", prompt=list(range(10)),
+                       sampling=SamplingParams(max_new_tokens=8)))
+    for _ in range(3):
+        eng.step()
+    req = eng.scheduler.running[0]
+    seq, mgr, runner = req.seq, eng.mgr, eng.runner
+    name = next(iter(runner._table_specs))
+    target0 = seq.num_computed
+    epoch0 = seq.epoch
+    n0 = len(seq.page_tables[name])
+    # speculatively over-allocate a few tokens ahead; mirror follows
+    assert mgr.allocate_for_tokens(seq, target0 + 6)
+    n1 = len(seq.page_tables[name])
+    assert n1 > n0
+    m = runner._mirror(seq)
+    assert m.n[name] == n1
+    # rollback pops the speculative tail: no epoch bump, mirror clamps
+    freed = mgr.rollback_tokens(seq, target0)
+    assert freed >= 1 and seq.epoch == epoch0
+    assert runner._mirror(seq) is m
+    assert m.n[name] == len(seq.page_tables[name]) < n1
+    # regrow to the SAME length with (possibly different) fresh pages: the
+    # trim event forces the tail to re-sync even though len matches
+    assert mgr.allocate_for_tokens(seq, target0 + 6)
+    assert len(seq.page_tables[name]) == n1
+    m2 = runner._mirror(seq)
+    assert m2 is m and m.n[name] == n1
+    live = np.asarray(seq.page_tables[name])
+    synced = m.table[name][:n1]
+    ok = (live == synced) | (live == -1)
+    assert ok.all(), (live, synced)
+    mgr.rollback_tokens(seq, target0)       # restore before draining
+    eng.run_until_done(max_steps=200)
+    eng.mgr.check_invariants()
 
 
 def test_baseline_mode_wastes_more_memory():

@@ -17,12 +17,7 @@ from repro.models.tp import single_device_dist
 from repro.serving import Engine, EngineConfig, Request, SamplingParams
 
 
-def make_engine(arch="granite-3-2b", **cfg_kw):
-    cfg = reduced(ARCHS[arch])
-    model = build_model(cfg, single_device_dist())
-    kw = dict(kv_pool_bytes=8 << 20, max_running=4, chunk_size=8)
-    kw.update(cfg_kw)
-    return Engine(model, EngineConfig(**kw)), cfg
+from conftest import make_engine
 
 
 def run_workload(eng, n_req=3, prompt=14, out=4):

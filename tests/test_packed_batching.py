@@ -13,19 +13,11 @@ budget instead of B*T padding.
 import numpy as np
 import pytest
 
-from repro.configs import ARCHS, reduced
-from repro.models.registry import build_model
-from repro.models.tp import single_device_dist
-from repro.serving import Engine, EngineConfig, Request, SamplingParams
+from repro.serving import Request, SamplingParams
 from repro.serving.runner import _tok_bucket
 
 
-def make_engine(arch="granite-3-2b", **cfg_kw):
-    cfg = reduced(ARCHS[arch])
-    model = build_model(cfg, single_device_dist())
-    kw = dict(kv_pool_bytes=8 << 20, max_running=4, chunk_size=8)
-    kw.update(cfg_kw)
-    return Engine(model, EngineConfig(**kw)), cfg
+from conftest import make_engine
 
 
 # ---------------------------------------------------------------- bucketing
@@ -209,6 +201,140 @@ def test_segment_mask_property():
                     assert kv_pos[j] > q_pos[i] - window, "outside window"
 
     check()
+
+
+# ---------------------------------------------------------- async engine
+# EngineConfig.async_scheduling double-buffers the step loop: plan N+1 is
+# scheduled (speculative +1 decode per running request) and host-built
+# while plan N's dispatch is in flight; sampling/advancing N happens when
+# its logits are fetched, and the already-built batch N+1 is reconciled
+# (dead segments killed, speculative pages rolled back, decode token ids
+# patched) before its own dispatch. Everything observable must be
+# BIT-IDENTICAL to the synchronous loop.
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "h2o-danube-3-4b",
+                                  "qwen2-vl-2b", "zamba2-1.2b", "rwkv6-3b",
+                                  "whisper-tiny", "dbrx-132b"])
+def test_async_matches_sync_greedy(arch):
+    """Async greedy outputs equal the synchronous packed engine's, token
+    for token, for every model family (attention, swa, vlm, hybrid-mamba2,
+    rwkv6, encdec, moe) — including mm/encoder item routing."""
+    from repro.core.request import MMItem
+    outs = {}
+    for async_ in (False, True):
+        eng, cfg = make_engine(arch, batching_mode="packed",
+                               max_num_batched_tokens=64,
+                               async_scheduling=async_)
+        for i in range(3):
+            kw = {}
+            if arch == "whisper-tiny":
+                kw["encoder_items"] = (MMItem(0, cfg.encoder_seq,
+                                              mm_hash=7 + i),)
+            elif arch == "qwen2-vl-2b":
+                kw["mm_items"] = (MMItem(2, 6, mm_hash=40 + i),)
+            eng.submit(Request(rid=f"r{i}",
+                               prompt=[(3 * i + j) % 50
+                                       for j in range(12 + i)],
+                               sampling=SamplingParams(max_new_tokens=5),
+                               **kw))
+        eng.run_until_done(max_steps=1000)
+        eng.mgr.check_invariants()
+        assert len(eng.finished) == 3
+        # one-step-delayed sampling must still stamp first/finished steps
+        # with the step that SAMPLED, matching the synchronous loop
+        outs[async_] = {r.rid: (list(r.output), r.first_token_step,
+                                r.finished_step) for r in eng.finished}
+    assert outs[False] == outs[True], (arch, outs)
+
+
+def test_async_matches_sync_padded_layout():
+    """Async scheduling composes with the padded (B, T) layout too — the
+    layout only changes how the runner flattens the plan."""
+    outs = {}
+    for async_ in (False, True):
+        eng, _ = make_engine(batching_mode="padded",
+                             max_num_batched_tokens=64,
+                             async_scheduling=async_)
+        for i in range(3):
+            eng.submit(Request(rid=f"r{i}", prompt=list(range(10 + i)),
+                               sampling=SamplingParams(max_new_tokens=4)))
+        eng.run_until_done(max_steps=500)
+        outs[async_] = {r.rid: list(r.output) for r in eng.finished}
+    assert outs[False] == outs[True], outs
+
+
+def test_async_serial_falls_back_to_sync():
+    """serial mode issues two dispatch groups per step; async_scheduling is
+    documented to fall back to the synchronous loop there."""
+    eng, _ = make_engine(batching_mode="serial", async_scheduling=True)
+    assert eng.async_scheduling is False
+    eng.submit(Request(rid="x", prompt=list(range(10)),
+                       sampling=SamplingParams(max_new_tokens=3)))
+    eng.run_until_done(max_steps=200)
+    assert len(eng.finished[0].output) == 3
+
+
+def test_async_eos_spec_rollback():
+    """A request that EOSes while its speculative +1 decode page is already
+    committed: the dead segment is neutralized in the prepared batch and
+    the page popped back (manager rollback), with outputs unchanged.
+    tokens_per_page=4 on reduced configs; prompt length 12 puts the EOS'd
+    request's speculative +1 exactly across a page boundary."""
+    probe, _ = make_engine(batching_mode="packed", async_scheduling=False)
+    probe.submit(Request(rid="p", prompt=[j % 50 for j in range(12)],
+                         sampling=SamplingParams(max_new_tokens=4)))
+    probe.run_until_done(max_steps=200)
+    eos = probe.finished[0].output[0]
+
+    outs = {}
+    for async_ in (False, True):
+        eng, _ = make_engine(batching_mode="packed",
+                             async_scheduling=async_)
+        eng.submit(Request(rid="x", prompt=[j % 50 for j in range(12)],
+                           sampling=SamplingParams(max_new_tokens=8,
+                                                   eos_token=eos)))
+        eng.run_until_done(max_steps=200)
+        eng.mgr.check_invariants()
+        outs[async_] = list(eng.finished[0].output)
+        if async_:
+            assert eng.spec_kills >= 1, "EOS kill path never exercised"
+            assert eng.spec_rollback_pages >= 1, \
+                "speculative +1 page was never committed/rolled back"
+        # dispatch accounting stays truthful through kills: killed slots
+        # count as padding waste, never as dispatched tokens
+        assert sum(m.batched_tokens for m in eng.metrics) == \
+            eng.runner.tokens_dispatched
+        assert sum(m.dispatched_slots for m in eng.metrics) == \
+            eng.runner.slots_dispatched
+    assert outs[False] == outs[True] and outs[True][-1] == eos, outs
+
+
+def test_async_prefix_cache_hit_restart():
+    """Prefix-cache-hit restart mid-run: a finished request's prompt is
+    resubmitted while other requests are mid-decode; the hit restores
+    state under async double-buffering exactly as under sync."""
+    outs = {}
+    for async_ in (False, True):
+        eng, _ = make_engine(batching_mode="packed",
+                             async_scheduling=async_)
+        eng.submit(Request(rid="a", prompt=list(range(16)),
+                           sampling=SamplingParams(max_new_tokens=3)))
+        eng.run_until_done(max_steps=200)           # a finishes, gets cached
+        eng.submit(Request(rid="bg", prompt=[7] * 10,
+                           sampling=SamplingParams(max_new_tokens=8)))
+        for _ in range(3):
+            eng.step()                              # bg mid-decode...
+        eng.submit(Request(rid="a2", prompt=list(range(16)),
+                           sampling=SamplingParams(max_new_tokens=3)))
+        eng.run_until_done(max_steps=400)
+        assert len(eng.finished) == 3
+        assert eng.mgr.prefix_hit_tokens_total > 0
+        a, a2 = [next(r for r in eng.finished if r.rid == rid)
+                 for rid in ("a", "a2")]
+        assert a.output == a2.output, (a.output, a2.output)
+        assert a2.seq.prefix_hit_tokens > 0          # the restart really hit
+        outs[async_] = {r.rid: list(r.output) for r in eng.finished}
+    assert outs[False] == outs[True], outs
 
 
 # ----------------------------------------------------------- runner layout

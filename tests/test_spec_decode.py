@@ -51,3 +51,24 @@ def test_spec_decode_shared_pool_two_page_sizes():
     assert sd.mgr.geometry.large_page_units % sizes["draft_full_attn"] == 0
     out = sd.generate(list(range(10)), max_new_tokens=6)
     assert len(out) == 6
+
+
+def test_spec_decode_async_flag_falls_back_to_sync():
+    """SpecDecodeConfig.async_scheduling is accepted for config parity but
+    EXPLICITLY falls back to the synchronous draft->verify loop (the
+    lockstep data dependency admits no one-step delay without a delayed
+    verify queue); outputs must be identical and the fallback recorded."""
+    tcfg = reduced(ARCHS["granite-3-2b"])
+    dcfg = reduced(ARCHS["internlm2-1.8b"], num_layers=2,
+                   vocab_size=tcfg.vocab_size)
+    dist = single_device_dist()
+    outs = {}
+    for async_ in (False, True):
+        sd = SpecDecodeEngine(
+            build_model(tcfg, dist), build_model(dcfg, dist),
+            SpecDecodeConfig(k=2, kv_pool_bytes=16 << 20, chunk_size=8,
+                             async_scheduling=async_),
+            seed=0)
+        assert sd.async_fallback is async_
+        outs[async_] = sd.generate(list(range(10)), max_new_tokens=6)
+    assert outs[False] == outs[True], outs

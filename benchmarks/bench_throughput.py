@@ -149,6 +149,71 @@ def run_async_ab(arch: str, n_req=16, prompt=96, out=24, budget=128):
                 sync_host_build_ms=sync_b)
 
 
+def run_kernel_ab(arch: str = "granite-3-2b", n_req=32, prompt=96, out=24,
+                  budget=128):
+    """Kernel-vs-ref + autotune A/B on the decode-heavy staggered workload.
+
+    Three timed legs over one workload: ref attention with the constant
+    budgets above, the Pallas varlen kernel path, and ref attention with
+    roofline-seeded autotuned budgets. Greedy outputs must match between
+    ref and kernel; the block-sparse accounting (host-side mirror of the
+    kernel's segment-interval skip test, identical for both impls since it
+    depends only on the schedule) must show a majority of KV blocks
+    skipped; autotuned budgets must finish in no more steps than the
+    hand-picked constants. ``n_req`` is sized so the packed stream spans
+    several query blocks — the skip fraction is bounded by 1 - 1/n_qblocks,
+    so a decode batch of ~32 segments is what makes >50% reachable."""
+    cfg = reduced(ARCHS[arch])
+    model = build_model(cfg, single_device_dist())
+    params = model.init(0)
+    from repro.serving.autotune import roofline_token_budget
+    rows = {}
+    for tag, impl, autotune in (("warmup", "ref", False),
+                                ("ref", "ref", False),
+                                ("kernel", "kernel", False),
+                                ("autotuned", "ref", True)):
+        eng = Engine(model, EngineConfig(
+            kv_pool_bytes=96 << 20, max_running=n_req, chunk_size=32,
+            batching_mode="packed", attention_impl=impl,
+            autotune_budgets=autotune, max_num_batched_tokens=budget,
+            enable_prefix_caching=False), params=params)
+        for i in range(n_req):
+            eng.submit(Request(rid=f"r{i}", prompt=[(7 * i + j) % 101
+                                                    for j in range(prompt)],
+                               sampling=SamplingParams(max_new_tokens=out)))
+            eng.step()      # staggered arrivals: prefills ride with decodes
+        t0 = time.perf_counter()
+        eng.run_until_done(max_steps=4000)
+        wall = time.perf_counter() - t0
+        if tag == "warmup":
+            continue
+        r = eng.runner
+        total = r.kv_blocks_scanned + r.kv_blocks_skipped
+        rows[tag] = dict(
+            outputs={q.rid: list(q.output) for q in eng.finished},
+            steps=eng.step_count, wall_s=wall,
+            kv_blocks_scanned=r.kv_blocks_scanned,
+            kv_blocks_skipped=r.kv_blocks_skipped,
+            kv_block_skip_frac=r.kv_blocks_skipped / max(1, total),
+            attn_gflops_modeled=r.attn_flops_modeled / 1e9,
+            attn_gbytes_modeled=r.attn_bytes_modeled / 1e9,
+            budget_final=eng.scheduler.cfg.max_num_batched_tokens,
+            prefill_cap_final=eng.scheduler.cfg.max_prefill_tokens_per_step,
+        )
+    assert rows["ref"]["outputs"] == rows["kernel"]["outputs"], \
+        "kernel changed greedy outputs"
+    assert rows["ref"]["kv_block_skip_frac"] > 0.5, rows["ref"]
+    assert rows["autotuned"]["steps"] <= rows["ref"]["steps"], \
+        (rows["autotuned"]["steps"], rows["ref"]["steps"])
+    for r in rows.values():
+        del r["outputs"]        # equality asserted; keep the JSON small
+    return dict(arch=arch, n_req=n_req, prompt=prompt, out=out,
+                budget_constant=budget,
+                budget_roofline_seed=roofline_token_budget(cfg),
+                ref=rows["ref"], kernel=rows["kernel"],
+                autotuned=rows["autotuned"])
+
+
 def main(report=print):
     for arch in ARCH_SET:
         rows = {}
@@ -191,6 +256,18 @@ def main(report=print):
            f"dispatches={ab['async_']['dispatches']} "
            f"overlapped_build_ms={ab['overlapped_host_build_ms']:.1f} "
            f"-> {path}")
+    # kernel + autotune A/B: block-sparse skip accounting, kernel==ref
+    # greedy outputs, autotuned-vs-constant step counts; JSON'd per-PR.
+    kb = run_kernel_ab()
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_kernel.json")
+    with open(path, "w") as f:
+        json.dump(kb, f, indent=2, sort_keys=True)
+    report(f"kernel_ab,0,"
+           f"skip={100 * kb['ref']['kv_block_skip_frac']:.1f}% "
+           f"steps_const={kb['ref']['steps']} "
+           f"steps_autotuned={kb['autotuned']['steps']} "
+           f"roofline_seed={kb['budget_roofline_seed']} -> {path}")
 
 
 if __name__ == "__main__":

@@ -67,7 +67,13 @@ def _varlen_kernel(q_ref, k_ref, v_ref, qseg_ref, kseg_ref, qpos_ref,
     """Segment-id variant: the batch is ONE packed token stream; the causal
     structure is block-diagonal over segments (q attends k iff
     kseg == qseg and kpos <= qpos). Pad q tokens carry seg -1, pad k slots
-    seg -2, so pads never match anything."""
+    seg -2, so pads never match anything.
+
+    Page streams are segment-contiguous (the host packs each segment's
+    pages back to back), so a KV block covers a tight interval of segment
+    ids; a whole (q block, kv block) pair is skipped when the two segment
+    intervals don't overlap — per-token KV work then tracks the token's
+    own context length instead of the whole batch's stream."""
     ki = pl.program_id(2)
     n_k = pl.num_programs(2)
 
@@ -77,32 +83,46 @@ def _varlen_kernel(q_ref, k_ref, v_ref, qseg_ref, kseg_ref, qpos_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0].astype(jnp.float32)                    # (blk_q, D)
-    k = k_ref[0].astype(jnp.float32)                    # (blk_k, D)
-    v = v_ref[0].astype(jnp.float32)
-    d = q.shape[-1]
-    logit = (q * (1.0 / d ** 0.5)) @ k.T                # (blk_q, blk_k)
-
     q_seg = qseg_ref[0][:, None]                        # (blk_q, 1)
     k_seg = kseg_ref[0][None, :]                        # (1, blk_k)
     q_pos = qpos_ref[0][:, None]
     k_pos = kpos_ref[0][None, :]
-    mask = (k_seg == q_seg) & (k_pos <= q_pos)
-    if window:
-        mask &= k_pos > q_pos - window
-    logit = jnp.where(mask, logit, NEG_INF)
 
-    m_prev = m_ref[...]
-    m_new = jnp.maximum(m_prev, jnp.max(logit, axis=-1))
-    # fully-masked block rows contribute NOTHING (p would otherwise
-    # degenerate to exp(NEG_INF - NEG_INF) = 1 per slot — a uniform
-    # average leaking other segments' values into no-slot rows)
-    p = jnp.where((m_new > NEG_INF / 2)[:, None],
-                  jnp.exp(logit - m_new[:, None]), 0.0)
-    corr = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
-    acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
-    m_ref[...] = m_new
+    # segment-interval overlap test (pads excluded: q pads seg -1, kv
+    # pads/dead slots seg -2; an all-pad block has an empty interval)
+    big = jnp.int32(1 << 30)
+    qs = qseg_ref[0]
+    ks = kseg_ref[0]
+    q_lo = jnp.min(jnp.where(qs >= 0, qs, big))
+    q_hi = jnp.max(jnp.where(qs >= 0, qs, -big))
+    k_lo = jnp.min(jnp.where(ks >= 0, ks, big))
+    k_hi = jnp.max(jnp.where(ks >= 0, ks, -big))
+    hit = (k_lo <= q_hi) & (k_hi >= q_lo)
+
+    @pl.when(hit)
+    def _update():
+        q = q_ref[0].astype(jnp.float32)                # (blk_q, D)
+        k = k_ref[0].astype(jnp.float32)                # (blk_k, D)
+        v = v_ref[0].astype(jnp.float32)
+        d = q.shape[-1]
+        logit = (q * (1.0 / d ** 0.5)) @ k.T            # (blk_q, blk_k)
+
+        mask = (k_seg == q_seg) & (k_pos <= q_pos)
+        if window:
+            mask &= k_pos > q_pos - window
+        logit = jnp.where(mask, logit, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logit, axis=-1))
+        # fully-masked block rows contribute NOTHING (p would otherwise
+        # degenerate to exp(NEG_INF - NEG_INF) = 1 per slot — a uniform
+        # average leaking other segments' values into no-slot rows)
+        p = jnp.where((m_new > NEG_INF / 2)[:, None],
+                      jnp.exp(logit - m_new[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
+        m_ref[...] = m_new
 
     @pl.when(ki == n_k - 1)
     def _final():

@@ -16,14 +16,16 @@ def flash(q, k, v, *, causal=True, window=0, use_kernel=True):
     return flash_attention_ref(q, k, v, causal=causal, window=window)
 
 
-@partial(jax.jit, static_argnames=("window", "use_kernel"))
+@partial(jax.jit, static_argnames=("window", "use_kernel", "blk_q", "blk_k"))
 def flash_varlen(q, k, v, q_seg, kv_seg, q_pos, kv_pos, *, window=0,
-                 use_kernel=True):
+                 use_kernel=True, blk_q=128, blk_k=128):
     """Token-packed (segment-id) flash attention — the kernel schedule the
-    packed serving layout maps onto for real TPU dispatch."""
+    packed serving layout maps onto for real TPU dispatch. blk_q/blk_k set
+    the block-sparse skip granularity (see _varlen_kernel)."""
     if use_kernel:
         return flash_attention_varlen_tpu(
             q, k, v, q_seg, kv_seg, q_pos, kv_pos, window=window,
+            blk_q=blk_q, blk_k=blk_k,
             interpret=jax.default_backend() != "tpu")
     return flash_attention_varlen_ref(q, k, v, q_seg, kv_seg, q_pos, kv_pos,
                                       window=window)

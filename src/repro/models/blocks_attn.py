@@ -11,10 +11,34 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ..kernels.flash_attention.kernel import flash_attention_varlen_tpu
 from . import attention as A
 from .common import dense, rms_norm
 from .rotary import apply_mrope, apply_rope
 from .tp import Dist, psum_tp
+
+# Block-size caps for the segment-block-sparse packed attention schedule
+# (MXU-friendly at scale; sparse_blocks scales them down for small streams).
+Q_BLOCK = 128
+KV_BLOCK = 512
+
+
+def _pow2_floor(n: int) -> int:
+    return 1 << (max(1, n).bit_length() - 1)
+
+
+def sparse_blocks(t: int, s: int) -> tuple:
+    """(q_block, kv_block) for the segment-block-sparse packed schedule.
+
+    Page streams are segment-contiguous, so per-block segment-id intervals
+    are tight and non-overlapping (q block, kv block) pairs can be
+    skipped. Aim for ~4 query blocks and ~16 KV blocks so skipping has
+    granularity to work with at serving sizes, clamped to the MXU-friendly
+    maxima (128 x 512) at scale and TPU-tile minima (8 x 64) below.
+    ``ModelRunner._attn_block_stats`` mirrors this sizing on the host for
+    the StepMetrics work counters — keep the two in sync."""
+    return (max(8, min(Q_BLOCK, _pow2_floor(t // 4))),
+            max(64, min(KV_BLOCK, _pow2_floor(s // 16))))
 
 
 # ---------------------------------------------------------------- attention
@@ -98,7 +122,7 @@ def attn_compute(p, x, gathered, dist: Dist, *, kv_local, head_dim,
                  positions, seq_lens, window=0, rope_theta=1e6,
                  mrope_positions=None, norm_eps=1e-5, prefill=False,
                  sp_axis: Optional[str] = None, kv_groups=None,
-                 seg_ids=None, chunk_start=None):
+                 seg_ids=None, chunk_start=None, impl="ref"):
     """Phase 2 (COMPUTE): attention over gathered old pages + this step's
     fresh K/V (still in registers — the buffer write happens in phase 3).
 
@@ -112,7 +136,13 @@ def attn_compute(p, x, gathered, dist: Dist, *, kv_local, head_dim,
     ``chunk_start`` (B, T) each token's chunk-start position (several
     sequences share one stream row); both masks then additionally require
     segment equality, using the slot_seg returned by ``attn_gather``.
-    Returns (x_out, k_fresh, v_fresh)."""
+
+    impl="kernel" dispatches the packed layout through the Pallas varlen
+    flash kernel (one block-sparse call over old++fresh KV, interpret
+    mode off-TPU) instead of the jnp reference. Falls back to ref for
+    non-packed layouts and for kv_groups/sp_axis sharding (the kernel
+    returns normalized output, so cross-shard partial combining doesn't
+    apply). Returns (x_out, k_fresh, v_fresh)."""
     k_all, v_all, slot_pos, slot_seg = gathered
     b, t, _ = x.shape
     xn = rms_norm(x, p["attn_norm"], norm_eps)
@@ -122,6 +152,14 @@ def attn_compute(p, x, gathered, dist: Dist, *, kv_local, head_dim,
     packed = seg_ids is not None
     if chunk_start is None:
         chunk_start = positions[:, :1]                         # (B, 1)
+    if (packed and impl == "kernel" and kv_groups is None
+            and sp_axis is None):
+        out = packed_kernel_attention(
+            q, k_all, v_all, slot_pos, slot_seg, k, v, positions, seg_ids,
+            chunk_start, window=window)
+        out = out.reshape(b, t, -1).astype(x.dtype)
+        y = dense(out, p["o"])
+        return x + psum_tp(y, dist), k, v
     if prefill or packed:
         o, m, l = _prefill_flash(q, k_all, v_all, slot_pos, positions,
                                  chunk_start=chunk_start, window=window,
@@ -194,11 +232,23 @@ def _prefill_flash(q, k, v, slot_pos, q_pos, *, window, chunk_start=None,
     attends via the fresh-KV path). q_seg (B,T) / kv_seg (B,S): packed
     segment ids; when given, the mask additionally requires
     kv_seg == q_seg so no token reads another sequence's pages.
-    q: (B,T,KVL,G,D); k/v: (B,S,KVL,D); slot_pos: (B,S); q_pos: (B,T)."""
+    q: (B,T,KVL,G,D); k/v: (B,S,KVL,D); slot_pos: (B,S); q_pos: (B,T).
+
+    PACKED streams (q_seg/kv_seg given, B == 1) run a segment-block-sparse
+    schedule: queries are blocked too, and (q block, kv block) pairs whose
+    segment-id intervals don't overlap are skipped entirely via lax.cond —
+    the page stream is segment-contiguous, so per-token KV work tracks the
+    token's own context length instead of the whole batch's S_flat. The
+    skip is exact: a non-overlapping block's mask is all-false, and an
+    all-masked block update is the identity (corr=1, pexp=0)."""
     b, t, kvl, g, d = q.shape
     s = k.shape[1]
     scale = 1.0 / (d ** 0.5)
     qf = q * scale
+    sparse = (q_seg is not None and kv_seg is not None
+              and chunk_start is not None and b == 1)
+    if sparse:
+        q_block, block = sparse_blocks(t, s)
     nblk = -(-s // block)
     pad = nblk * block - s
     if pad:
@@ -213,6 +263,11 @@ def _prefill_flash(q, k, v, slot_pos, q_pos, *, window, chunk_start=None,
     vb = v.reshape(b, nblk, block, kvl, d)
     pb = slot_pos.reshape(b, nblk, block)
     sb = None if kv_seg is None else kv_seg.reshape(b, nblk, block)
+
+    if sparse:
+        return _prefill_flash_sparse(
+            qf, kb, vb, pb, sb, q_seg, q_pos, chunk_start,
+            window=window, q_block=q_block)
 
     def body(carry, blk):
         m, l, acc = carry
@@ -253,6 +308,158 @@ def _prefill_flash(q, k, v, slot_pos, q_pos, *, window, chunk_start=None,
         xs.append(jnp.moveaxis(sb, 1, 0))
     (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), tuple(xs))
     return acc, m, l
+
+
+def _prefill_flash_sparse(qf, kb, vb, pb, sb, q_seg, q_pos, chunk_start, *,
+                          window, q_block):
+    """Segment-block-sparse inner schedule for _prefill_flash (B == 1).
+
+    qf: pre-scaled queries (1,T,KVL,G,D); kb/vb/pb/sb: KV blocked
+    (1,nblk,block,...). Outer scan over query blocks, inner scan over KV
+    blocks; a lax.cond skips the whole tile when the blocks' segment-id
+    intervals don't overlap. Returns partials (acc, m, l) shaped exactly
+    like the dense path."""
+    _, t, kvl, g, d = qf.shape
+    nblk, block = kb.shape[1], kb.shape[2]
+    nqb = -(-t // q_block)
+    pad_q = nqb * q_block - t
+    qfp, qsp, qpp = qf[0], q_seg[0], q_pos[0]
+    csp = jnp.broadcast_to(chunk_start, (1, t))[0]
+    if pad_q:
+        qfp = jnp.pad(qfp, ((0, pad_q), (0, 0), (0, 0), (0, 0)))
+        qsp = jnp.pad(qsp, (0, pad_q), constant_values=-1)
+        qpp = jnp.pad(qpp, (0, pad_q))
+        csp = jnp.pad(csp, (0, pad_q))
+    qfb = qfp.reshape(nqb, q_block, kvl, g, d)
+    qsb = qsp.reshape(nqb, q_block)
+    qpb = qpp.reshape(nqb, q_block)
+    csb = csp.reshape(nqb, q_block)
+    kbr, vbr, pbr, sbr = kb[0], vb[0], pb[0], sb[0]
+
+    # per-block segment-id intervals (pads excluded: q pads -1, kv -2)
+    big = jnp.int32(1 << 30)
+    k_lo = jnp.min(jnp.where(sbr >= 0, sbr, big), axis=1)      # (nblk,)
+    k_hi = jnp.max(jnp.where(sbr >= 0, sbr, -big), axis=1)
+    q_lo = jnp.min(jnp.where(qsb >= 0, qsb, big), axis=1)      # (nqb,)
+    q_hi = jnp.max(jnp.where(qsb >= 0, qsb, -big), axis=1)
+
+    def qblock(_, qx):
+        qfb_i, qsb_i, qpb_i, csb_i, qlo_i, qhi_i = qx
+
+        def kvblock(carry, kx):
+            kblk, vblk, pblk, sblk, klo_j, khi_j = kx
+            hit = (klo_j <= qhi_i) & (khi_j >= qlo_i)
+
+            def update(c):
+                m, l, acc = c
+                logit = jnp.einsum("tkgd,jkd->kgtj", qfb_i, kblk,
+                                   preferred_element_type=jnp.float32)
+                mask = pblk[None, :] < csb_i[:, None]          # (qb, blk)
+                if window:
+                    mask &= pblk[None, :] > qpb_i[:, None] - window
+                mask &= sblk[None, :] == qsb_i[:, None]
+                logit_m = jnp.where(mask[None, None], logit, A.NEG_INF)
+                m_new = jnp.maximum(m, jnp.max(logit_m, axis=-1))
+                pexp = jnp.exp(logit_m - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + jnp.sum(pexp, axis=-1)
+                acc_new = acc * corr[..., None] + jnp.einsum(
+                    "kgtj,jkd->kgtd", pexp.astype(vblk.dtype), vblk,
+                    preferred_element_type=jnp.float32)
+                return m_new, l_new, acc_new
+
+            return jax.lax.cond(hit, update, lambda c: c, carry), None
+
+        m0 = jnp.full((kvl, g, q_block), A.NEG_INF, jnp.float32)
+        l0 = jnp.zeros((kvl, g, q_block), jnp.float32)
+        a0 = jnp.zeros((kvl, g, q_block, d), jnp.float32)
+        out, _ = jax.lax.scan(kvblock, (m0, l0, a0),
+                              (kbr, vbr, pbr, sbr, k_lo, k_hi))
+        return None, out
+
+    _, (ms, ls, accs) = jax.lax.scan(
+        qblock, None, (qfb, qsb, qpb, csb, q_lo, q_hi))
+    m = jnp.moveaxis(ms, 0, 2).reshape(kvl, g, nqb * q_block)[..., :t][None]
+    l = jnp.moveaxis(ls, 0, 2).reshape(kvl, g, nqb * q_block)[..., :t][None]
+    acc = jnp.moveaxis(accs, 0, 2).reshape(
+        kvl, g, nqb * q_block, d)[:, :, :t][None]
+    return acc, m, l
+
+
+def _bh_streams(q, k, v, groups):
+    """(1,T,KVL,G,D) q + (1,S,KVL,D) k/v -> (BH,·,D) head streams for the
+    Pallas varlen kernel, kv heads repeated per q group (kv head h serves
+    q heads h*g .. h*g+g-1, matching the (KVL, G) flattening order)."""
+    b, t, kvl, g, d = q.shape
+    qbh = q[0].transpose(1, 2, 0, 3).reshape(kvl * g, t, d)
+    kbh = jnp.repeat(k[0].transpose(1, 0, 2), g, axis=0)
+    vbh = jnp.repeat(v[0].transpose(1, 0, 2), g, axis=0)
+    return qbh, kbh, vbh
+
+
+def _bh_out(out, kvl, g):
+    """(BH,T,D) kernel output back to (1,T,KVL,G,D)."""
+    bh, t, d = out.shape
+    return out.reshape(kvl, g, t, d).transpose(2, 0, 1, 3)[None]
+
+
+def packed_kernel_attention(q, k_old, v_old, slot_pos, slot_seg, k_fresh,
+                            v_fresh, positions, seg_ids, chunk_start, *,
+                            window=0):
+    """Packed serve attention via the Pallas varlen kernel: ONE
+    segment-block-sparse flash call over [old page slots ++ fresh chunk
+    K/V], replacing the ref path's two-part partials merge.
+
+    Old slots are gated by their segment's chunk start (parity with the
+    ref's strict ``slot_pos < chunk_start`` mask): a scatter-max over the
+    token stream recovers each segment's chunk start, and slots at or past
+    it — plus dead/pad slots (seg -2) — are re-tagged seg -2 so they never
+    match. Fresh tokens ride with kv_pos = positions, so the kernel's
+    ``kpos <= qpos`` rule reproduces the ref's intra-chunk causal mask;
+    old valid slots always have pos < chunk_start <= qpos, so the same
+    rule is a no-op for them.
+
+    Single-shard only (the kernel returns normalized output; callers with
+    kv_groups/sp_axis keep the ref partials path). q: (1,T,KVL,G,D);
+    k_old/v_old: (1,S,KVL,D); k_fresh/v_fresh: (1,T,KVL,D). Returns
+    (1,T,KVL,G,D) in q.dtype; rows with no visible KV come out zero."""
+    b, t, kvl, g, d = q.shape
+    s = k_old.shape[1]
+    sid = seg_ids[0]
+    cs = jnp.broadcast_to(chunk_start, (b, t))[0]
+    seg_cs = jnp.full((t,), -1, jnp.int32).at[jnp.clip(sid, 0, t - 1)].max(
+        jnp.where(sid >= 0, cs, -1))
+    slot_cs = jnp.take(seg_cs, jnp.clip(slot_seg[0], 0, t - 1))
+    live = (slot_seg[0] >= 0) & (slot_pos[0] < slot_cs)
+    kv_seg = jnp.concatenate([jnp.where(live, slot_seg[0], -2), sid])
+    kv_pos = jnp.concatenate([slot_pos[0], positions[0]])
+    kk = jnp.concatenate([k_old, k_fresh], axis=1)
+    vv = jnp.concatenate([v_old, v_fresh], axis=1)
+    qbh, kbh, vbh = _bh_streams(q, kk, vv, g)
+    blk_q, blk_k = sparse_blocks(t, s + t)
+    out = flash_attention_varlen_tpu(
+        qbh, kbh, vbh, sid, kv_seg, positions[0], kv_pos, window=window,
+        blk_q=blk_q, blk_k=blk_k,
+        interpret=jax.default_backend() != "tpu")
+    return _bh_out(out, kvl, g)
+
+
+def packed_cross_attn_kernel(q, k_all, v_all, slot_pos, slot_seg, seg_ids,
+                             enc_lens):
+    """Packed cross-attention via the varlen kernel: each decoder token
+    attends every encoder slot of its own segment with slot_pos <
+    enc_lens, encoded as the kernel's ``kpos <= qpos`` rule with
+    q_pos := enc_lens - 1. Text-only rows (enc_lens == 0) get q_pos -1,
+    match nothing, and come out exactly zero — the ref path's explicit
+    zero guard. Returns (1,T,KVL,G,D) normalized output in q.dtype."""
+    b, t, kvl, g, d = q.shape
+    qbh, kbh, vbh = _bh_streams(q, k_all, v_all, g)
+    blk_q, blk_k = sparse_blocks(t, k_all.shape[1])
+    out = flash_attention_varlen_tpu(
+        qbh, kbh, vbh, seg_ids[0], slot_seg[0], enc_lens[0] - 1,
+        slot_pos[0], blk_q=blk_q, blk_k=blk_k,
+        interpret=jax.default_backend() != "tpu")
+    return _bh_out(out, kvl, g)
 
 
 def cross_attn_cached(p, x, view, dist: Dist, *, layer, kv_local, head_dim,

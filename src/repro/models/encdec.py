@@ -199,7 +199,8 @@ class EncDecLM(DecoderLM):
         return psum_dp(loss, dist) / dist.dp
 
     # ------------------------------------------------------------------ serve
-    def _serve_body(self, params, buffer, batch: DecodeBatch, *, prefill):
+    def _serve_body(self, params, buffer, batch: DecodeBatch, *, prefill,
+                    attention_impl="ref"):
         cfg, dist, ri = self.cfg, self.dist, self.ri
         eps = cfg.norm_eps
         params = self._squeeze_params(params)
@@ -218,6 +219,10 @@ class EncDecLM(DecoderLM):
             page_pos_ca = sq(batch.page_pos["cross_attn"])
         kv_groups = (None if ri["repl"] == 1 else
                      A.replica_groups(ri["kv_tp"], ri["repl"]))
+        # kernel dispatch is packed + single-shard only (the Pallas call
+        # returns normalized output; sharded partials keep the ref path)
+        use_kernel = (attention_impl == "kernel" and packed
+                      and kv_groups is None)
 
         if prefill and batch.enc_embeds is not None:
             # run encoder once; write per-layer cross KV pages
@@ -277,33 +282,42 @@ class EncDecLM(DecoderLM):
             s = k_all.shape[1]
             chunk_start = (batch.chunk_start if packed
                            else positions[:, :1])
-            if prefill or packed:
-                from .blocks_attn import _prefill_flash
-                o, m, l = _prefill_flash(q, k_all, v_all, slot_pos,
-                                         positions, chunk_start=chunk_start,
-                                         window=0, q_seg=batch.seg_ids,
-                                         kv_seg=slot_seg)
+            if use_kernel:
+                out = BA.packed_kernel_attention(
+                    q, k_all, v_all, slot_pos, slot_seg, k, v, positions,
+                    batch.seg_ids, chunk_start)
+                out = out.reshape(b, t, -1).astype(x.dtype)
             else:
-                mask = slot_pos[:, None, :] < chunk_start[:, :, None]
-                o, m, l = A.attend_tokens(q, k_all, v_all, mask)
-            if kv_groups is not None:
-                o, m, l = A.combine_partials(o, m, l, dist.tp_axis,
-                                             groups=kv_groups)
-            # fresh intra-chunk part
-            if packed:
-                mask_f = A.segment_mask(batch.seg_ids, positions,
-                                        batch.seg_ids, positions)
-                of, mf, lf = A.attend_tokens(q, k, v, mask_f)
-            elif t == 1:
-                mask_f = jnp.ones((b, 1, 1), bool)
-                of, mf, lf = A.attend_tokens(q, k, v, mask_f)
-            elif t <= 256:
-                mask_f = positions[:, None, :] <= positions[:, :, None]
-                of, mf, lf = A.attend_tokens(q, k, v, mask_f)
-            else:
-                of, mf, lf = A.flash_attention_partials(q, k, v, causal=True)
-            o, m, l = A.merge_partials(o, m, l, of, mf, lf)
-            out = A.finalize_softmax(o, l).reshape(b, t, -1).astype(x.dtype)
+                if prefill or packed:
+                    from .blocks_attn import _prefill_flash
+                    o, m, l = _prefill_flash(q, k_all, v_all, slot_pos,
+                                             positions,
+                                             chunk_start=chunk_start,
+                                             window=0, q_seg=batch.seg_ids,
+                                             kv_seg=slot_seg)
+                else:
+                    mask = slot_pos[:, None, :] < chunk_start[:, :, None]
+                    o, m, l = A.attend_tokens(q, k_all, v_all, mask)
+                if kv_groups is not None:
+                    o, m, l = A.combine_partials(o, m, l, dist.tp_axis,
+                                                 groups=kv_groups)
+                # fresh intra-chunk part
+                if packed:
+                    mask_f = A.segment_mask(batch.seg_ids, positions,
+                                            batch.seg_ids, positions)
+                    of, mf, lf = A.attend_tokens(q, k, v, mask_f)
+                elif t == 1:
+                    mask_f = jnp.ones((b, 1, 1), bool)
+                    of, mf, lf = A.attend_tokens(q, k, v, mask_f)
+                elif t <= 256:
+                    mask_f = positions[:, None, :] <= positions[:, :, None]
+                    of, mf, lf = A.attend_tokens(q, k, v, mask_f)
+                else:
+                    of, mf, lf = A.flash_attention_partials(q, k, v,
+                                                            causal=True)
+                o, m, l = A.merge_partials(o, m, l, of, mf, lf)
+                out = A.finalize_softmax(o, l).reshape(b, t, -1)
+                out = out.astype(x.dtype)
             y = psum_tp(dense(out, ps["o"]), dist)
             x = x + y + ps["o_bias"].astype(y.dtype)
             # --- cross attention (pre-gathered encoder KV)
@@ -311,23 +325,37 @@ class EncDecLM(DecoderLM):
             q = dense(xn, pc["q"], pc["q_bias"]).reshape(b, t, -1, cfg.head_dim)
             q = A.group_q(q, ri["kv_local"])
             sc = kc.shape[1]
-            if packed:
-                # enc_lens is per TOKEN; slot_pos_ca carries each flat
-                # cross slot's encoder position, slot_seg_ca its segment
-                mask = (slot_seg_ca[:, None, :] == batch.seg_ids[:, :, None]) \
-                    & (slot_pos_ca[:, None, :] < batch.enc_lens[:, :, None])
+            if use_kernel:
+                # kernel zeroes fully-masked rows (enc_lens == 0) exactly,
+                # matching the explicit zero guard of the ref path below
+                out = BA.packed_cross_attn_kernel(
+                    q, kc, vc, slot_pos_ca, slot_seg_ca, batch.seg_ids,
+                    batch.enc_lens)
+                out = out.reshape(b, t, -1).astype(x.dtype)
             else:
-                mask = jnp.broadcast_to(
-                    (jnp.arange(sc)[None] < batch.enc_lens[:, None])[:, None],
-                    (b, t, sc))
-            o, m, l = A.attend_tokens(q, kc, vc, mask)
-            out = A.finalize_softmax(o, l).reshape(b, t, -1).astype(x.dtype)
-            if packed:
-                # all-masked rows degenerate to a uniform average over the
-                # WHOLE flat slot stream (other segments' values); a padded
-                # row would average its own zeroed pages instead — zero
-                # no-encoder tokens explicitly so the layouts agree
-                out = out * (batch.enc_lens > 0)[..., None].astype(out.dtype)
+                if packed:
+                    # enc_lens is per TOKEN; slot_pos_ca carries each flat
+                    # cross slot's encoder position, slot_seg_ca its segment
+                    mask = (slot_seg_ca[:, None, :]
+                            == batch.seg_ids[:, :, None]) \
+                        & (slot_pos_ca[:, None, :]
+                           < batch.enc_lens[:, :, None])
+                else:
+                    mask = jnp.broadcast_to(
+                        (jnp.arange(sc)[None]
+                         < batch.enc_lens[:, None])[:, None],
+                        (b, t, sc))
+                o, m, l = A.attend_tokens(q, kc, vc, mask)
+                out = A.finalize_softmax(o, l).reshape(b, t, -1)
+                out = out.astype(x.dtype)
+                if packed:
+                    # all-masked rows degenerate to a uniform average over
+                    # the WHOLE flat slot stream (other segments' values);
+                    # a padded row would average its own zeroed pages
+                    # instead — zero no-encoder tokens explicitly so the
+                    # layouts agree
+                    out = out * (batch.enc_lens > 0)[..., None].astype(
+                        out.dtype)
             y = psum_tp(dense(out, pc["o"]), dist)
             x = x + y + pc["o_bias"].astype(y.dtype)
             x = self._mlp(pm, x, eps)

@@ -175,7 +175,8 @@ class HybridLM(DecoderLM):
         loss = sharded_softmax_xent(logits, targets, dist)
         return psum_dp(loss, dist) / dist.dp
 
-    def _serve_body(self, params, buffer, batch: DecodeBatch, *, prefill):
+    def _serve_body(self, params, buffer, batch: DecodeBatch, *, prefill,
+                    attention_impl="ref"):
         cfg, dist = self.cfg, self.dist
         params = self._squeeze_params(params)
         buffer = buffer.reshape(buffer.shape[-1])
@@ -248,7 +249,8 @@ class HybridLM(DecoderLM):
                 positions=positions, seq_lens=batch.seq_lens,
                 rope_theta=cfg.rope_theta, norm_eps=cfg.norm_eps,
                 prefill=prefill, sp_axis=sp_axis, kv_groups=kv_groups,
-                seg_ids=batch.seg_ids, chunk_start=batch.chunk_start)
+                seg_ids=batch.seg_ids, chunk_start=batch.chunk_start,
+                impl=attention_impl)
             x = BA.mlp_block(shared, x, dist, cfg.norm_eps)
             buf = BA.attn_write(buf, views["full_attn"], cyc, write_eids,
                                 positions, k, v)

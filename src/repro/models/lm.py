@@ -359,7 +359,7 @@ class DecoderLM:
 
     # --------------------------------------------------------------- serve
     def serve_step(self, params, buffer, batch: DecodeBatch, *,
-                   prefill: bool):
+                   prefill: bool, attention_impl: str = "ref"):
         """One serving step over a MIXED batch: rows are independent
         sequences with ragged per-row token counts (concurrent prefill
         chunks and single-token decodes share the dispatch). Correctness is
@@ -408,7 +408,8 @@ class DecoderLM:
         out_logit_spec = (P(None, "model") if (sp or packed)
                           else P(dp, "model"))
         fn = shard_map(
-            partial(self._serve_body, prefill=prefill),
+            partial(self._serve_body, prefill=prefill,
+                    attention_impl=attention_impl),
             mesh=dist.mesh,
             in_specs=(self.specs(), buf_spec, batch_specs),
             out_specs=(out_logit_spec, buf_spec),
@@ -431,7 +432,8 @@ class DecoderLM:
             views[s.name] = (vp, s.num_layers) + shapes[s.name]
         return views
 
-    def _serve_body(self, params, buffer, batch: DecodeBatch, *, prefill):
+    def _serve_body(self, params, buffer, batch: DecodeBatch, *, prefill,
+                    attention_impl="ref"):
         cfg, dist = self.cfg, self.dist
         params = self._squeeze_params(params)
         buffer = buffer.reshape(buffer.shape[-1])          # local flat units
@@ -483,7 +485,8 @@ class DecoderLM:
                     window=window, rope_theta=cfg.rope_theta,
                     mrope_positions=mrope_pos, norm_eps=cfg.norm_eps,
                     prefill=prefill, sp_axis=sp_axis, kv_groups=kv_groups,
-                    seg_ids=batch.seg_ids, chunk_start=batch.chunk_start)
+                    seg_ids=batch.seg_ids, chunk_start=batch.chunk_start,
+                    impl=attention_impl)
                 writes.append((tname, layer_in_type, k, v))
                 if self.is_moe:
                     x, _ = BA.moe_block(

@@ -122,7 +122,10 @@ class RWKVLM(DecoderLM):
         loss = sharded_softmax_xent(logits, targets, dist)
         return psum_dp(loss, dist) / dist.dp
 
-    def _serve_body(self, params, buffer, batch: DecodeBatch, *, prefill):
+    def _serve_body(self, params, buffer, batch: DecodeBatch, *, prefill,
+                    attention_impl="ref"):
+        # attention_impl is accepted for serve_step signature parity but
+        # unused: RWKV has no attention layers to dispatch
         cfg, dist = self.cfg, self.dist
         params = self._squeeze_params(params)
         buffer = buffer.reshape(buffer.shape[-1])

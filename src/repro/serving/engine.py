@@ -58,6 +58,35 @@ from .runner import ModelRunner, PreparedStep
 from .scheduler import ScheduledSeq, Scheduler, SchedulerConfig, StepPlan
 
 
+# Greedy-sampling tie band: candidates within TIE_EPS of the max logit
+# count as tied and the LOWEST token id wins, a deterministic rule on the
+# fp32 logits (raw argmax breaks ties by array order, which bf16 noise
+# reorders). What this CAN and CANNOT buy: the unembed emits fp32 logits,
+# but the bf16 hidden state feeding it differs across layouts/impls
+# (packed vs padded vs serial streams, ref vs kernel attention, MoE
+# expert tiling, mamba2 packed vs chunked scans) by reduction order —
+# per-candidate gaps to the max move by ~1e-4 on dense archetypes up to
+# ~4e-3 on MoE decode chains. The band absorbs near-ties well inside it,
+# but NO constant is layout-independent in general: a candidate whose gap
+# lands within noise of the band edge itself still flips (measured: 1e-3
+# flipped a dbrx 0.9e-3 near-tie, 3e-2 flipped on danube's #3 candidate
+# at gap ~3e-2), and the flip points move with the band because earlier
+# picks change the trajectory. Cross-layout greedy comparisons therefore
+# use the fork-aware checker in tests/conftest.py: exact token equality
+# until a divergence, which must itself be a genuinely ambiguous decision
+# (both candidates within TIE_FORK_TOL of the max in BOTH modes' recorded
+# fp32 rows — see EngineConfig.record_sample_logits) — a real bug (leak,
+# wrong mask) diverges with a large gap and still fails loudly.
+TIE_EPS = 5e-3
+
+
+def greedy_token(logits: np.ndarray) -> int:
+    """Tie-banded greedy argmax over one logits row (see TIE_EPS). Every
+    greedy consumer (engine sampler, spec-decode draft/verify) must use
+    this same rule or their outputs drift apart on near-ties."""
+    return int(np.flatnonzero(logits >= logits.max() - TIE_EPS)[0])
+
+
 def stub_modality_embed(mm_hash: int, offset: int, dim: int) -> np.ndarray:
     """Deterministic stand-in for the vision/audio frontend (assignment:
     frontends are stubs; embeddings are 'precomputed')."""
@@ -88,6 +117,20 @@ class EngineConfig:
     enable_prefix_caching: bool = True
     memory_mode: str = "jenga"       # "jenga" | "paged-baseline"
     geometry_mode: str = "lcm"        # "lcm" | "max"
+    # "ref"    — jnp reference attention (segment-block-sparse scan);
+    # "kernel" — the packed layout dispatches the Pallas varlen flash
+    #            kernel (interpret mode off-TPU, so CI exercises the real
+    #            kernel code path); padded/serial layouts keep ref.
+    attention_impl: str = "ref"
+    # Seed max_num_batched_tokens / max_prefill_tokens_per_step from the
+    # roofline model and refine them online from StepMetrics (see
+    # serving.autotune) instead of using the constants above.
+    autotune_budgets: bool = False
+    # Record each greedy sample's fp32 logits row (vocab-sliced) in
+    # Engine.sample_log[rid], aligned with Request.output. Test-only
+    # support for the fork-aware cross-layout greedy comparison (see the
+    # TIE_EPS note); off by default — rows are vocab_size floats per token.
+    record_sample_logits: bool = False
     seed: int = 0
 
 
@@ -111,6 +154,15 @@ class StepMetrics:
     # host build already ran (the overlap win is host_build_ms no longer
     # serializing with it).
     dispatch_ms: float = 0.0
+    # Attention-work counters (packed layout): (q block, KV block) tiles
+    # of the old-page self-attention streams this step scanned vs skipped
+    # by the segment-block-sparse schedule, and the modeled FLOPs / HBM
+    # bytes of the scanned tiles (host cost model — see
+    # ModelRunner._attn_block_stats).
+    kv_blocks_scanned: int = 0
+    kv_blocks_skipped: int = 0
+    attn_flops_modeled: float = 0.0
+    attn_bytes_modeled: float = 0.0
 
 
 @dataclasses.dataclass
@@ -156,11 +208,20 @@ class Engine:
                 max_num_batched_tokens=cfg.max_num_batched_tokens,
                 max_prefill_tokens_per_step=cfg.max_prefill_tokens_per_step,
                 serial=cfg.batching_mode == "serial"))
+        self.autotuner = None
+        if cfg.autotune_budgets:
+            from .autotune import BudgetAutotuner
+            self.autotuner = BudgetAutotuner(model.cfg)
+            self.scheduler.set_budgets(self.autotuner.budget,
+                                       self.autotuner.prefill_cap)
+        assert cfg.attention_impl in ("ref", "kernel"), cfg.attention_impl
         self.runner = ModelRunner(model, self.mgr,
-                                  stub_embed_fn=stub_modality_embed)
+                                  stub_embed_fn=stub_modality_embed,
+                                  attention_impl=cfg.attention_impl)
         self.params = params if params is not None else model.init(seed)
         self.step_count = 0
         self.metrics: List[StepMetrics] = []
+        self.sample_log: Dict[str, List[np.ndarray]] = {}
         self.encoder_runs = 0
         self.mm_seen: set = set()
         self.finished: List[Request] = []
@@ -170,6 +231,9 @@ class Engine:
         # rolled back from those speculative +1 commitments
         self.spec_kills = 0
         self.spec_rollback_pages = 0
+        # runner attention-work totals already folded into StepMetrics
+        # (the runner accumulates across dispatches; steps record deltas)
+        self._attn_seen = (0, 0, 0.0, 0.0)
 
     # ------------------------------------------------- baseline semantics
     def _apply_baseline_semantics(self):
@@ -346,6 +410,11 @@ class Engine:
         stats = self.mgr.memory_stats()
         slots = self.runner.slots_dispatched - slots_before
         tokens = plan.total_tokens if tokens is None else tokens
+        r = self.runner
+        attn_now = (r.kv_blocks_scanned, r.kv_blocks_skipped,
+                    r.attn_flops_modeled, r.attn_bytes_modeled)
+        attn_delta = tuple(a - b for a, b in zip(attn_now, self._attn_seen))
+        self._attn_seen = attn_now
         m = StepMetrics(
             step=self.step_count,
             decode_batch=len(plan.decodes),
@@ -360,9 +429,16 @@ class Engine:
             pad_slots=max(0, slots - tokens),
             host_build_ms=build_ms,
             dispatch_ms=disp_ms,
+            kv_blocks_scanned=attn_delta[0],
+            kv_blocks_skipped=attn_delta[1],
+            attn_flops_modeled=attn_delta[2],
+            attn_bytes_modeled=attn_delta[3],
         )
         self.metrics.append(m)
         self.step_count += 1
+        if self.autotuner is not None and self.autotuner.observe(m):
+            self.scheduler.set_budgets(self.autotuner.budget,
+                                       self.autotuner.prefill_cap)
         return m
 
     def _count_encoder_runs(self, scheduled: Sequence[ScheduledSeq]) -> None:
@@ -411,8 +487,13 @@ class Engine:
     def _sample(self, req: Request, logits: np.ndarray) -> int:
         v = self.model.cfg.vocab_size
         logits = logits[:v]
+        if self.cfg.record_sample_logits:
+            self.sample_log.setdefault(req.rid, []).append(
+                np.asarray(logits, np.float32).copy())
         if req.sampling.temperature <= 0:
-            return int(np.argmax(logits))
+            # greedy with a deterministic tie-break on the fp32 logits
+            # (lowest token id within TIE_EPS of the max — see TIE_EPS)
+            return greedy_token(logits)
         rng = np.random.default_rng(
             (req.sampling.seed, len(req.output), hash(req.rid) & 0xFFFF))
         p = logits / req.sampling.temperature

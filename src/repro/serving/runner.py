@@ -195,11 +195,27 @@ class _SeqMirror:
         self.pos[name] = pos
 
 
+def _seg_intervals(vals: np.ndarray, block: int):
+    """Per-block (lo, hi) segment-id intervals of a flat id stream, pads
+    (negative ids) excluded; an all-pad block gets an empty interval that
+    overlaps nothing."""
+    n = -(-vals.shape[0] // block)
+    pad = n * block - vals.shape[0]
+    v = np.pad(vals, (0, pad), constant_values=-2).reshape(n, block)
+    valid = v >= 0
+    big = 1 << 30
+    lo = np.where(valid, v, big).min(axis=1)
+    hi = np.where(valid, v, -big).max(axis=1)
+    return lo, hi
+
+
 class ModelRunner:
     def __init__(self, model, manager: JengaKVCacheManager,
-                 stub_embed_fn=None):
+                 stub_embed_fn=None, attention_impl: str = "ref"):
+        assert attention_impl in ("ref", "kernel"), attention_impl
         self.model = model
         self.mgr = manager
+        self.attention_impl = attention_impl
         self.specs = {s.name: s for s in model.kv_specs()}
         self.stub_embed_fn = stub_embed_fn
         big = _lcm([s.page_units for s in self.specs.values()])
@@ -228,6 +244,14 @@ class ModelRunner:
         self.tokens_dispatched = 0
         self.slots_dispatched = 0
         self.dispatch_count = 0
+        # attention-work counters (block-sparse observability): cumulative
+        # totals across dispatches; the engine records per-step deltas into
+        # StepMetrics. Host-modeled from the packed layout metadata — see
+        # _attn_block_stats.
+        self.kv_blocks_scanned = 0
+        self.kv_blocks_skipped = 0
+        self.attn_flops_modeled = 0.0
+        self.attn_bytes_modeled = 0.0
 
     # -------------------------------------------------------------- mirrors
     def _mirror(self, seq: SequenceState) -> _SeqMirror:
@@ -331,6 +355,42 @@ class ModelRunner:
             if ctab is not None and pg < mirror.n.get(
                     "cross_attn", 0) and ctab[pg] >= 0:
                 enc_write[0, 0, row, j] = ctab[pg]
+
+    # ---------------------------------------------------- attention stats
+    def _attn_block_stats(self, TT: int, seg_ids_row: np.ndarray,
+                          page_seg: Dict[str, np.ndarray]) -> dict:
+        """Host mirror of the device segment-block-sparse schedule: per-step
+        counts of (q block, KV block) tiles scanned vs skipped over the
+        OLD-page self-attention streams (full_attn/swa; fresh-part and
+        cross-attn work is small by comparison), plus modeled attention
+        FLOPs and HBM bytes for the scanned tiles. Mirrors
+        ``blocks_attn.sparse_blocks`` sizing — keep the two in sync."""
+        from ..models.blocks_attn import sparse_blocks
+        cfg = self.model.cfg
+        scanned = skipped = 0
+        flops = bytes_ = 0.0
+        for name, spec in self._table_specs.items():
+            if spec.kind not in ("full_attn", "swa"):
+                continue
+            ps = page_seg[name][0, 0, 0]
+            tpp = spec.tokens_per_page
+            slot_seg = np.repeat(ps, tpp)
+            s = slot_seg.shape[0]
+            qb, kb = sparse_blocks(TT, s)
+            q_lo, q_hi = _seg_intervals(seg_ids_row, qb)
+            k_lo, k_hi = _seg_intervals(slot_seg, kb)
+            hits = int(((k_lo[None, :] <= q_hi[:, None])
+                        & (k_hi[None, :] >= q_lo[:, None])).sum())
+            pairs = q_lo.shape[0] * k_lo.shape[0]
+            L = spec.num_layers
+            scanned += hits * L
+            skipped += (pairs - hits) * L
+            # per scanned tile: QK^T + PV matmuls over all query heads...
+            flops += hits * L * 4.0 * qb * kb * cfg.head_dim * cfg.num_heads
+            # ...and one read of the tile's K+V slots (bf16)
+            bytes_ += hits * L * kb * cfg.num_kv_heads * cfg.head_dim * 2 * 2
+        return dict(kv_blocks_scanned=scanned, kv_blocks_skipped=skipped,
+                    attn_flops_modeled=flops, attn_bytes_modeled=bytes_)
 
     # ----------------------------------------------------------- batching
     def prepare(self, items, packed: bool = True) -> PreparedStep:
@@ -571,7 +631,9 @@ class ModelRunner:
                has_mm, has_enc)
         return arrs, {"key": key, "n": n, "prefill": True,
                       "fresh_state": fresh_state, "pending": pending,
-                      "seg_off": seg_off, "tokens": total, "slots": TT}
+                      "seg_off": seg_off, "tokens": total, "slots": TT,
+                      "attn_work": self._attn_block_stats(
+                          TT, seg_ids[0], page_seg)}
 
     # ----------------------------------------------------------------- run
     def dispatch(self, params, prep: PreparedStep):
@@ -588,14 +650,21 @@ class ModelRunner:
         self.tokens_dispatched += info["tokens"] - dead_tokens
         self.slots_dispatched += info["slots"]
         self.dispatch_count += 1
+        aw = info.get("attn_work")
+        if aw is not None:
+            self.kv_blocks_scanned += aw["kv_blocks_scanned"]
+            self.kv_blocks_skipped += aw["kv_blocks_skipped"]
+            self.attn_flops_modeled += aw["attn_flops_modeled"]
+            self.attn_bytes_modeled += aw["attn_bytes_modeled"]
         self.zero_pages(self.mgr.drain_fresh_pages())
         for name, eid in info["fresh_state"]:
             self.zero_page(name, eid)
-        key = info["key"]
+        key = info["key"] + (self.attention_impl,)
         fn = self._steps.get(key)
         if fn is None:
             fn = jax.jit(partial(self.model.serve_step,
-                                 prefill=info["prefill"]),
+                                 prefill=info["prefill"],
+                                 attention_impl=self.attention_impl),
                          donate_argnums=(1,))
             self._steps[key] = fn
         logits, self.buffer = fn(params, self.buffer, self._to_batch(prep.arrs))

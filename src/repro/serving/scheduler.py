@@ -135,6 +135,14 @@ class Scheduler:
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)
 
+    def set_budgets(self, max_num_batched_tokens: int,
+                    max_prefill_tokens_per_step: Optional[int]) -> None:
+        """Retarget the step packing budgets between steps (autotuning —
+        see serving.autotune). ``schedule()`` reads the config fresh each
+        call, so the next plan picks the new budgets up immediately."""
+        self.cfg.max_num_batched_tokens = max_num_batched_tokens
+        self.cfg.max_prefill_tokens_per_step = max_prefill_tokens_per_step
+
     # ------------------------------------------------------------ schedule
     def schedule(self, inflight: Optional[Dict[str, int]] = None) -> StepPlan:
         inflight = inflight or {}

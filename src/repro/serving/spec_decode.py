@@ -22,6 +22,7 @@ import numpy as np
 
 from ..core.manager import JengaKVCacheManager
 from ..core.request import SequenceState
+from .engine import greedy_token
 from .request import Request, SamplingParams
 from .runner import ModelRunner
 
@@ -122,7 +123,7 @@ class SpecDecodeEngine:
                 self.mgr.advance(seq, n)
             if seq is tseq:
                 t_last = logits
-        first = int(np.argmax(t_last[0][: self.tm.cfg.vocab_size]))
+        first = greedy_token(t_last[0][: self.tm.cfg.vocab_size])
         out = [first]
         tseq.append_token(first)
         dseq.append_token(first)
@@ -134,7 +135,7 @@ class SpecDecodeEngine:
                 assert self.mgr.allocate_for_tokens(dseq, dseq.num_tokens)
                 logits = self.d_runner.run_plan_shared(self.dp, [(dreq, 1)])
                 self.mgr.advance(dseq, 1)
-                tok = int(np.argmax(logits[0][: self.dm.cfg.vocab_size]))
+                tok = greedy_token(logits[0][: self.dm.cfg.vocab_size])
                 proposals.append(tok)
                 dseq.append_token(tok)
             # ---- target verifies k+1 positions in one step
@@ -142,8 +143,8 @@ class SpecDecodeEngine:
             tseq.tokens = dseq.tokens[: base + k + 1]
             assert self.mgr.allocate_for_tokens(tseq, base + k + 1)
             t_logits = self._target_multi(treq, base, k + 1)
-            greedy = np.argmax(
-                t_logits[:, : self.tm.cfg.vocab_size], axis=-1)
+            greedy = [greedy_token(row)
+                      for row in t_logits[:, : self.tm.cfg.vocab_size]]
             n_accept = 0
             while n_accept < k and proposals[n_accept] == int(greedy[n_accept]):
                 n_accept += 1

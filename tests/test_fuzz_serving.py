@@ -5,7 +5,8 @@ lengths, mm/encoder items, shared prefixes, random EOS tokens, pool sizes
 tight enough to force preemption — are driven through the engine in async,
 synchronous-packed, and serial modes, asserting for every model archetype:
 
-  * greedy token equality: async == sync == serial, bit for bit;
+  * greedy token equality: async == sync bit for bit; sync == serial
+    token-exact up to fork-checked ambiguous near-ties;
   * no page leaks after drain: zero referenced pages, and with prefix
     caching off the pool's free count is fully restored;
   * refcount / mirror invariants: ``check_invariants`` on every pool plus
@@ -19,23 +20,22 @@ machinery runs under its strategies with shrinking on top
 (``test_fuzz_hypothesis_async_equals_sync``); the seeded tests keep the
 coverage alive when it is not.
 
-A calibration note the harness itself surfaced: async == sync is a STRICT
-bitwise property (double buffering reorders host work only — plans,
-dispatch shapes, and reduction orders are identical), and the harness
-asserts it on every random workload. sync == serial is bitwise only up to
-bf16 numeric TIES: chunked and whole-prompt prefill sum attention in
-different orders, and a greedy argmax whose top-2 logits sit within
-rounding distance (~1e-4 observed on qwen2-vl with a 25-token prompt at
-chunk 8 — a pre-existing property of the seed engine, reproducible at PR-2)
-can flip. The serial comparisons therefore run on PINNED seeds verified
-tie-free; if a future change flips one, treat it as a signal, not noise.
+async == sync is a STRICT bitwise property (double buffering reorders
+host work only — plans, dispatch shapes, and reduction orders are
+identical) and is asserted exactly. sync == serial changes bf16
+reduction orders (packed stream vs one-request steps, MoE expert tiling,
+mamba2 packed vs chunked scans), so it is compared with the fork-aware
+checker (``conftest.assert_greedy_equiv``): token-exact until a
+divergence, which must itself be a genuinely ambiguous near-tie in both
+modes' recorded fp32 logit rows — a real semantic bug (leak, wrong mask)
+diverges with a large gap and still fails. No seed pinning needed.
 """
 import random
 import zlib
 
 import pytest
 
-from conftest import get_model
+from conftest import assert_greedy_equiv, get_model
 from repro.core.request import MMItem
 from repro.serving import Engine, EngineConfig, Request, SamplingParams
 
@@ -120,7 +120,8 @@ def run_mode(arch, workload, *, mode="packed", async_=False, pool=8 << 20,
     eng = Engine(model, EngineConfig(
         kv_pool_bytes=pool, max_running=4, chunk_size=8,
         max_num_batched_tokens=budget, batching_mode=mode,
-        async_scheduling=async_, enable_prefix_caching=caching),
+        async_scheduling=async_, enable_prefix_caching=caching,
+        record_sample_logits=True),
         params=params)
     outs = drive(eng, workload)
     check_drained(eng, len(workload))
@@ -128,11 +129,6 @@ def run_mode(arch, workload, *, mode="packed", async_=False, pool=8 << 20,
 
 
 # ------------------------------------------------------------ arch sweep
-# Stable per-arch seeds (crc32 + offset); the dbrx offset skips a workload
-# whose serial leg hits a bf16 argmax tie (see module docstring).
-_ARCH_SEED_OFF = {"dbrx-132b": 1}
-
-
 @pytest.mark.parametrize("arch", ["granite-3-2b", "h2o-danube-3-4b",
                                   "qwen2-vl-2b", "zamba2-1.2b", "rwkv6-3b",
                                   "whisper-tiny", "dbrx-132b"])
@@ -140,14 +136,14 @@ def test_fuzz_async_sync_serial_equal(arch):
     """For every archetype: one seeded random workload, greedy equality
     across async double-buffered, synchronous packed, and legacy serial
     schedules, with drain invariants after each run."""
-    rng = random.Random(zlib.crc32(arch.encode())
-                        + _ARCH_SEED_OFF.get(arch, 0))
+    rng = random.Random(zlib.crc32(arch.encode()))
     _, cfg, _ = get_model(arch)
     wl = gen_workload(rng, cfg)
-    _, sync = run_mode(arch, wl, mode="packed", async_=False)
+    sync_eng, sync = run_mode(arch, wl, mode="packed", async_=False)
     _, asyn = run_mode(arch, wl, mode="packed", async_=True)
-    _, serial = run_mode(arch, wl, mode="serial", async_=False)
-    assert sync == asyn == serial, (arch, sync, asyn, serial)
+    serial_eng, _ = run_mode(arch, wl, mode="serial", async_=False)
+    assert sync == asyn, (arch, sync, asyn)     # bitwise: same dispatches
+    assert_greedy_equiv(sync_eng, serial_eng, label=arch)
 
 
 # ------------------------------------------------------------- deep fuzz

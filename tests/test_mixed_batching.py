@@ -17,7 +17,7 @@ from repro.models.tp import single_device_dist
 from repro.serving import Engine, EngineConfig, Request, SamplingParams
 
 
-from conftest import make_engine
+from conftest import assert_greedy_equiv, make_engine
 
 
 def run_workload(eng, n_req=3, prompt=14, out=4):
@@ -62,17 +62,24 @@ def test_serial_mode_schedules_one_prefill():
                                   "qwen2-vl-2b", "zamba2-1.2b", "rwkv6-3b",
                                   "whisper-tiny", "dbrx-132b"])
 def test_packed_padded_serial_greedy_equal(arch):
-    """Greedy outputs are identical token-for-token across all three
-    batching layouts — packed stream, padded rows, and the legacy
+    """Greedy outputs are token-identical across all three batching
+    layouts — packed stream, padded rows, and the legacy
     one-prefill-per-step schedule (ample memory: no preemption) — for
     every model family (attention, swa, vlm, hybrid-mamba2, rwkv6,
-    encdec, moe)."""
-    outs = {}
+    encdec, moe), up to fork-checked ambiguous near-ties: the layouts
+    reduce in different orders, so genuinely tied top-2 decisions may
+    flip (conftest.assert_greedy_equiv bounds any divergence)."""
+    engs = {}
     for mode in ("packed", "padded", "serial"):
         eng, _ = make_engine(arch, batching_mode=mode,
-                             max_num_batched_tokens=64)
-        outs[mode] = run_workload(eng)
-    assert outs["packed"] == outs["padded"] == outs["serial"], (arch, outs)
+                             max_num_batched_tokens=64,
+                             record_sample_logits=True)
+        run_workload(eng)
+        engs[mode] = eng
+    assert_greedy_equiv(engs["packed"], engs["padded"],
+                        label=f"{arch}/padded")
+    assert_greedy_equiv(engs["packed"], engs["serial"],
+                        label=f"{arch}/serial")
 
 
 @pytest.mark.parametrize("arch", ["qwen2-vl-2b", "whisper-tiny"])

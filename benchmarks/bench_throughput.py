@@ -149,6 +149,82 @@ def run_async_ab(arch: str, n_req=16, prompt=96, out=24, budget=128):
                 sync_host_build_ms=sync_b)
 
 
+def run_pipeline_ab(arch: str = "granite-3-2b", n_req=16, prompt=96, out=24,
+                    budget=128):
+    """Pipeline-depth / device-sampling A/B on the decode-heavy staggered
+    workload. Three timed legs: depth-2 host-sampled (the PR-3 double
+    buffer), depth-2 device-sampled (same ring, completion blocks on 4
+    bytes/segment instead of a vocab-wide fp32 row), and depth-4
+    device-sampled (up to 3 steps queued on device). Semantic gates:
+    greedy outputs bitwise identical across all legs (the device sampler
+    shares the host tie-band rule), depth 4 finishes in no more engine
+    steps than depth 2, and the drained pool leaks nothing. The recorded
+    signals are the tentpole's: per-step fetched bytes, host sampling ms
+    (0 on device legs), generated tokens/s, and the issue/queue/compute
+    timing split."""
+    cfg = reduced(ARCHS[arch])
+    model = build_model(cfg, single_device_dist())
+    params = model.init(0)
+    rows = {}
+    legs = (("warmup", 2, False), ("depth2_host", 2, False),
+            ("depth2_device", 2, True), ("depth4_device", 4, True))
+    for tag, depth, device in legs:
+        eng = Engine(model, EngineConfig(
+            kv_pool_bytes=96 << 20, max_running=n_req, chunk_size=32,
+            batching_mode="packed", async_scheduling=True,
+            pipeline_depth=depth, device_sampling=device,
+            max_num_batched_tokens=budget, enable_prefix_caching=False),
+            params=params)
+        for i in range(n_req):
+            eng.submit(Request(rid=f"r{i}", prompt=[(7 * i + j) % 101
+                                                    for j in range(prompt)],
+                               sampling=SamplingParams(max_new_tokens=out)))
+            eng.step()      # staggered arrivals: prefills ride with decodes
+        t0 = time.perf_counter()
+        eng.run_until_done(max_steps=4000)
+        wall = time.perf_counter() - t0
+        if tag == "warmup":
+            continue
+        ms = eng.metrics
+        stats = eng.mgr.memory_stats()
+        assert stats.used_units == 0 and \
+            stats.free_units == stats.total_units, (tag, stats)
+        gen = sum(len(r.output) for r in eng.finished)
+        rows[tag] = dict(
+            outputs={r.rid: list(r.output) for r in eng.finished},
+            steps=eng.step_count,
+            wall_s=wall,
+            gen_tok_per_s=gen / max(1e-9, wall),
+            fetched_bytes_total=eng.runner.bytes_fetched,
+            fetched_bytes_per_step=eng.runner.bytes_fetched
+            / max(1, eng.step_count),
+            host_sample_ms_total=sum(m.host_sample_ms for m in ms),
+            host_build_ms_total=sum(m.host_build_ms for m in ms),
+            dispatch_wait_ms_total=sum(m.dispatch_ms for m in ms),
+            dispatch_issue_ms_total=sum(m.dispatch_issue_ms for m in ms),
+            dispatch_queue_ms_total=sum(m.dispatch_queue_ms for m in ms),
+            dispatch_compute_ms_total=sum(m.dispatch_compute_ms for m in ms),
+            spec_kills=eng.spec_kills,
+        )
+    base = rows["depth2_host"]
+    for tag in ("depth2_device", "depth4_device"):
+        assert rows[tag]["outputs"] == base["outputs"], \
+            f"{tag} changed greedy outputs"
+    assert rows["depth4_device"]["steps"] <= base["steps"], \
+        (rows["depth4_device"]["steps"], base["steps"])
+    # the round-trip kill: vocab-wide fp32 rows -> (segments,) int32
+    assert rows["depth2_device"]["fetched_bytes_total"] * 10 \
+        <= base["fetched_bytes_total"], rows["depth2_device"]
+    assert rows["depth2_device"]["host_sample_ms_total"] == 0.0
+    for r in rows.values():
+        del r["outputs"]        # equality asserted; keep the JSON small
+    return dict(arch=arch, n_req=n_req, prompt=prompt, out=out,
+                budget=budget,
+                fetch_bytes_ratio=base["fetched_bytes_total"]
+                / max(1, rows["depth2_device"]["fetched_bytes_total"]),
+                **rows)
+
+
 def run_kernel_ab(arch: str = "granite-3-2b", n_req=32, prompt=96, out=24,
                   budget=128):
     """Kernel-vs-ref + autotune A/B on the decode-heavy staggered workload.
@@ -255,6 +331,20 @@ def main(report=print):
            f"sync_us/step={ab['sync']['us_per_step']:.0f} "
            f"dispatches={ab['async_']['dispatches']} "
            f"overlapped_build_ms={ab['overlapped_host_build_ms']:.1f} "
+           f"-> {path}")
+    # pipeline-depth / device-sampling A/B: fetched-bytes collapse, depth-4
+    # ring vs the depth-2 double buffer, identical greedy outputs; JSON'd.
+    pb = run_pipeline_ab("granite-3-2b")
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_pipeline.json")
+    with open(path, "w") as f:
+        json.dump(pb, f, indent=2, sort_keys=True)
+    report(f"pipeline_ab,0,"
+           f"fetch_bytes_ratio={pb['fetch_bytes_ratio']:.0f}x "
+           f"steps_d2={pb['depth2_host']['steps']} "
+           f"steps_d4={pb['depth4_device']['steps']} "
+           f"bytes/step_d2host={pb['depth2_host']['fetched_bytes_per_step']:.0f} "
+           f"bytes/step_d4dev={pb['depth4_device']['fetched_bytes_per_step']:.0f} "
            f"-> {path}")
     # kernel + autotune A/B: block-sparse skip accounting, kernel==ref
     # greedy outputs, autotuned-vs-constant step counts; JSON'd per-PR.

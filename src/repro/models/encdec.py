@@ -23,8 +23,8 @@ from .lm import DecoderLM, DecodeBatch, _dp_spec
 from .params import PD
 from .rotary import sinusoidal_positions
 from .tp import (embed_lookup, expand_gqa_kv, expand_gqa_o, expand_gqa_q,
-                 logits_local, psum_dp, psum_tp, replica_info, shard_map,
-                 sharded_softmax_xent)
+                 logits_local, mask_pad_vocab, psum_dp, psum_tp, replica_info,
+                 shard_map, sharded_softmax_xent)
 
 MAX_DEC_POS = 32768 + 8
 
@@ -377,4 +377,5 @@ class EncDecLM(DecoderLM):
         else:
             x = x[:, -1:]
         logits = logits_local(x, params["embed"])[:, 0]
+        logits = mask_pad_vocab(logits, cfg.vocab_size, dist)
         return logits, buffer.reshape(1, 1, -1)

@@ -20,7 +20,7 @@ from .common import rms_norm
 from .lm import DecoderLM, DecodeBatch, _dp_spec
 from .params import PD
 from .tp import (embed_lookup, expand_gqa_kv, expand_gqa_o, expand_gqa_q,
-                 logits_local, psum_dp, sharded_softmax_xent)
+                 logits_local, mask_pad_vocab, psum_dp, sharded_softmax_xent)
 
 
 class HybridLM(DecoderLM):
@@ -279,4 +279,5 @@ class HybridLM(DecoderLM):
         else:
             x = x[:, -1:]
         logits = logits_local(x, self._unembed(params))[:, 0]
+        logits = mask_pad_vocab(logits, cfg.vocab_size, dist)
         return logits, buffer.reshape(1, 1, -1)

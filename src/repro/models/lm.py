@@ -22,8 +22,9 @@ from .common import rms_norm
 from .params import PD, init_params, param_specs, param_struct
 from .rotary import mrope_positions as _mrope3
 from .tp import (Dist, embed_lookup, expand_gqa_kv, expand_gqa_o,
-                 expand_gqa_q, gather_logits, logits_local, psum_dp, psum_tp,
-                 replica_info, shard_map, sharded_softmax_xent)
+                 expand_gqa_q, gather_logits, logits_local, mask_pad_vocab,
+                 psum_dp, psum_tp, replica_info, shard_map,
+                 sharded_softmax_xent)
 
 
 @dataclasses.dataclass
@@ -514,4 +515,5 @@ class DecoderLM:
         else:
             x = x[:, -1:]
         logits = logits_local(x, self._unembed(params))[:, 0]  # (B, V_loc)
+        logits = mask_pad_vocab(logits, cfg.vocab_size, dist)
         return logits, buffer.reshape(1, 1, -1)

@@ -17,8 +17,8 @@ from . import blocks_seq as BS
 from .common import rms_norm
 from .lm import DecoderLM, DecodeBatch
 from .params import PD
-from .tp import (embed_lookup, expand_replicated, logits_local, psum_dp,
-                 sharded_softmax_xent)
+from .tp import (embed_lookup, expand_replicated, logits_local,
+                 mask_pad_vocab, psum_dp, sharded_softmax_xent)
 
 LORA_RANK = 32
 
@@ -176,4 +176,5 @@ class RWKVLM(DecoderLM):
         else:
             x = x[:, -1:]
         logits = logits_local(x, self._unembed(params))[:, 0]
+        logits = mask_pad_vocab(logits, cfg.vocab_size, dist)
         return logits, buffer.reshape(1, 1, -1)

@@ -206,6 +206,21 @@ def sharded_softmax_xent(logits_loc, targets, dist: Dist, mask=None):
     return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
 
 
+def mask_pad_vocab(logits_loc, vocab_size: int, dist: Dist):
+    """Mask pad-vocab columns (global id >= vocab_size) to -1e30.
+
+    The unembed table is padded to V_local * tp rows whose logits are
+    garbage (random init); the serve heads mask them here so BOTH the
+    device sampler and the host sampler can operate on full v_pad rows
+    identically — exp(-1e30) underflows to exactly 0 in a softmax and
+    pads sort last under top-k, so no caller ever needs to slice
+    [:vocab_size] again. Keep in sync with serving.sampler.NEG."""
+    v_local = logits_loc.shape[-1]
+    shard = jax.lax.axis_index(dist.tp_axis)
+    gid = shard * v_local + jnp.arange(v_local)
+    return jnp.where(gid < vocab_size, logits_loc, -1e30)
+
+
 def gather_logits(logits_loc, dist: Dist):
     """(..., V_local) -> (..., V) via all-gather over the tp axis."""
     g = jax.lax.all_gather(logits_loc, dist.tp_axis, axis=-1, tiled=True)

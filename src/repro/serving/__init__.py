@@ -1,5 +1,6 @@
 from .engine import Engine, EngineConfig, StepMetrics, stub_modality_embed
 from ..core.request import MMItem
 from .request import Request, SamplingParams, Status
+from .sampler import TIE_EPS, greedy_token, host_sample, rid_hash
 from .scheduler import ScheduledSeq, Scheduler, SchedulerConfig, StepPlan
-from .runner import ModelRunner
+from .runner import ModelRunner, StepHandle

@@ -17,22 +17,36 @@ sample / retire:
      checkpoint copies emitted by ``advance`` run as one batched dispatch
      at the end of the step.
 
-ASYNC SCHEDULING (``EngineConfig.async_scheduling``, double-buffered):
-while step N's dispatch is in flight on the device, the host plans step
-N+1 and builds its packed batch — sampling and advancing step N happen one
-step later, when its logits are fetched. Decode rows in plan N+1 are
+ASYNC SCHEDULING (``EngineConfig.async_scheduling``, pipelined): while
+step N's dispatch is in flight on the device, the host plans step N+1 and
+builds its packed batch — sampling and advancing step N happen one step
+later, when its results are fetched. Decode rows in plan N+1 are
 scheduled SPECULATIVELY (each running decode assumed to produce +1 token,
 vLLM async-scheduling style) with their pages pre-committed through the
-manager's transactional ``allocate_for_batch``; when the fetched logits
-reveal a request actually finished (EOS / token budget), its segment in
-the already-built batch is neutralized to pad semantics and its
-speculative +1 page commitment rolled back (``mgr.rollback_tokens``)
-before the batch is dispatched. Greedy outputs are bit-identical to the
+manager's transactional ``allocate_for_batch``; when a completed step
+reveals a request actually finished (EOS / token budget), its segments in
+EVERY still-queued plan are neutralized to pad semantics and its
+speculative page commitments rolled back in one trailing pop
+(``mgr.rollback_tokens``). Greedy outputs are bit-identical to the
 synchronous loop: segments are isolated by the packed segment mask, so a
 dead slot changes nothing for its neighbours, and recompute preemption is
 semantically transparent. ``async_scheduling`` composes with
 ``batching_mode`` "packed" and "padded"; "serial" (two dispatch groups per
 step) falls back to the synchronous loop.
+
+PIPELINE DEPTH (``EngineConfig.pipeline_depth``): the in-flight slot is a
+ring of up to ``pipeline_depth - 1`` dispatched steps. Depth 2 (default)
+is the PR-3 double buffer. Deeper rings require DEVICE SAMPLING
+(``EngineConfig.device_sampling``; forced on beyond depth 2): the fused
+sampling tail in ``ModelRunner.dispatch`` picks each segment's token on
+device (shared ``greedy_token`` tie-band semantics, bit-identical to the
+host path, plus seeded temperature/top-k — see ``serving.sampler``) and
+scatters it into a device-resident token board that later dispatches read
+back (``inject_tokens``), so the host plans step N+k from effective
+positions without ever seeing a logit: completion blocks on a
+``(segments,)`` int32 vector — 4 bytes per segment instead of
+``vocab * 4`` — and logits rows are only fetched under
+``record_sample_logits``.
 
 ``batching_mode="serial"`` reproduces the legacy one-prefill-chunk-per-step
 engine (prefill and decode as separate dispatches) for step-count A/Bs and
@@ -46,8 +60,10 @@ device-wait timings the async overlap is measured by."""
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -55,36 +71,35 @@ from ..core.manager import JengaKVCacheManager, StateCopyOp
 from ..core.spec import KVCacheSpec
 from .request import Request, SamplingParams, Status
 from .runner import ModelRunner, PreparedStep
+from .sampler import TIE_EPS, greedy_token, host_sample, rid_hash
 from .scheduler import ScheduledSeq, Scheduler, SchedulerConfig, StepPlan
 
 
-# Greedy-sampling tie band: candidates within TIE_EPS of the max logit
-# count as tied and the LOWEST token id wins, a deterministic rule on the
-# fp32 logits (raw argmax breaks ties by array order, which bf16 noise
-# reorders). What this CAN and CANNOT buy: the unembed emits fp32 logits,
-# but the bf16 hidden state feeding it differs across layouts/impls
-# (packed vs padded vs serial streams, ref vs kernel attention, MoE
-# expert tiling, mamba2 packed vs chunked scans) by reduction order —
-# per-candidate gaps to the max move by ~1e-4 on dense archetypes up to
-# ~4e-3 on MoE decode chains. The band absorbs near-ties well inside it,
-# but NO constant is layout-independent in general: a candidate whose gap
-# lands within noise of the band edge itself still flips (measured: 1e-3
-# flipped a dbrx 0.9e-3 near-tie, 3e-2 flipped on danube's #3 candidate
-# at gap ~3e-2), and the flip points move with the band because earlier
-# picks change the trajectory. Cross-layout greedy comparisons therefore
-# use the fork-aware checker in tests/conftest.py: exact token equality
-# until a divergence, which must itself be a genuinely ambiguous decision
-# (both candidates within TIE_FORK_TOL of the max in BOTH modes' recorded
-# fp32 rows — see EngineConfig.record_sample_logits) — a real bug (leak,
-# wrong mask) diverges with a large gap and still fails loudly.
-TIE_EPS = 5e-3
-
-
-def greedy_token(logits: np.ndarray) -> int:
-    """Tie-banded greedy argmax over one logits row (see TIE_EPS). Every
-    greedy consumer (engine sampler, spec-decode draft/verify) must use
-    this same rule or their outputs drift apart on near-ties."""
-    return int(np.flatnonzero(logits >= logits.max() - TIE_EPS)[0])
+# Greedy-sampling tie band (re-exported from serving.sampler, the single
+# source of truth for token selection): candidates within TIE_EPS of the
+# max logit count as tied and the LOWEST token id wins, a deterministic
+# rule on the fp32 logits (raw argmax breaks ties by array order, which
+# bf16 noise reorders). What this CAN and CANNOT buy: the unembed emits
+# fp32 logits, but the bf16 hidden state feeding it differs across
+# layouts/impls (packed vs padded vs serial streams, ref vs kernel
+# attention, MoE expert tiling, mamba2 packed vs chunked scans) by
+# reduction order — per-candidate gaps to the max move by ~1e-4 on dense
+# archetypes up to ~4e-3 on MoE decode chains. The band absorbs near-ties
+# well inside it, but NO constant is layout-independent in general: a
+# candidate whose gap lands within noise of the band edge itself still
+# flips (measured: 1e-3 flipped a dbrx 0.9e-3 near-tie, 3e-2 flipped on
+# danube's #3 candidate at gap ~3e-2), and the flip points move with the
+# band because earlier picks change the trajectory. Cross-layout greedy
+# comparisons therefore use the fork-aware checker in tests/conftest.py:
+# exact token equality until a divergence, which must itself be a
+# genuinely ambiguous decision (both candidates within TIE_FORK_TOL of
+# the max in BOTH modes' recorded fp32 rows — see
+# EngineConfig.record_sample_logits) — a real bug (leak, wrong mask)
+# diverges with a large gap and still fails loudly. The device sampler
+# implements the same rule as a boolean argmax over the band
+# (see serving.sampler._band_pick) and is bit-identical to the host form.
+TIE_EPS = TIE_EPS                  # re-exported; canonical home: sampler.py
+greedy_token = greedy_token
 
 
 def stub_modality_embed(mm_hash: int, offset: int, dim: int) -> np.ndarray:
@@ -114,6 +129,18 @@ class EngineConfig:
     # "packed"/"padded"; "serial" falls back to the synchronous loop
     # (its two dispatch groups per step defeat single-slot buffering).
     async_scheduling: bool = False
+    # In-flight pipeline depth: up to (pipeline_depth - 1) dispatched
+    # steps stay queued on device. None resolves from $REPRO_PIPELINE_DEPTH
+    # (default 2 — the PR-3 double buffer); 1 forces the synchronous loop.
+    # Depths > 2 require device_sampling (the host never sees step N's
+    # tokens before planning N+2).
+    pipeline_depth: Optional[int] = None
+    # Sample tokens ON DEVICE in the dispatch (fused greedy/temperature
+    # tail + token board, see serving.sampler); completion then fetches 4
+    # bytes per segment instead of the vocab*4 logits row. None: enabled
+    # exactly when pipeline_depth > 2. Only meaningful with
+    # async_scheduling; greedy results are bit-identical either way.
+    device_sampling: Optional[bool] = None
     enable_prefix_caching: bool = True
     memory_mode: str = "jenga"       # "jenga" | "paged-baseline"
     geometry_mode: str = "lcm"        # "lcm" | "max"
@@ -150,10 +177,25 @@ class StepMetrics:
     pad_slots: int = 0         # slots paid beyond real tokens (waste)
     host_build_ms: float = 0.0  # host-side schedule + batch-build time
     # Device-wait time: sync = dispatch+fetch of THIS step's logits; async
-    # = time blocked fetching the PREVIOUS step's logits after this step's
+    # = time blocked fetching the PREVIOUS step's results after this step's
     # host build already ran (the overlap win is host_build_ms no longer
     # serializing with it).
     dispatch_ms: float = 0.0
+    # Pipeline timing split (async; host-observed estimates). issue: time
+    # spent in runner.dispatch() handing work to the device. For each step
+    # COMPLETED during this call: queue = time it sat behind the previous
+    # step's completion, compute = completion minus max(issue, previous
+    # completion). dispatch_ms above stays the blocked-fetch wait.
+    dispatch_issue_ms: float = 0.0
+    dispatch_queue_ms: float = 0.0
+    dispatch_compute_ms: float = 0.0
+    # Host-side sampling time (greedy argmax / seeded draw in _sample);
+    # 0 under device sampling — that is the point.
+    host_sample_ms: float = 0.0
+    # Device->host bytes fetched this step (logits rows and/or sampled
+    # token vectors): vocab*4 per segment host-sampled vs 4 per segment
+    # device-sampled.
+    sampled_bytes_fetched: int = 0
     # Attention-work counters (packed layout): (q block, KV block) tiles
     # of the old-page self-attention streams this step scanned vs skipped
     # by the segment-block-sparse schedule, and the modeled FLOPs / HBM
@@ -167,14 +209,15 @@ class StepMetrics:
 
 @dataclasses.dataclass
 class _InflightStep:
-    """A dispatched-but-not-completed step (async double buffering). The
-    PreparedStep itself is NOT retained — after dispatch only the plan and
-    per-segment liveness matter."""
+    """A dispatched-but-not-completed step (one ring slot of the async
+    pipeline). The PreparedStep itself is NOT retained — after dispatch
+    only the plan and per-segment liveness matter."""
     plan: StepPlan
-    handle: object             # device logits (JAX async dispatch)
+    handle: object             # runner.StepHandle (JAX async dispatch)
     epochs: List[int]          # per-segment seq.epoch at dispatch time
     live: List[bool]           # False: segment killed at reconciliation
     step: int                  # engine step index this dispatch was logged as
+    dispatched_at: float = 0.0  # perf_counter at issue (timing split)
 
 
 class Engine:
@@ -187,9 +230,23 @@ class Engine:
         assert cfg.batching_mode in ("packed", "padded", "serial"), \
             cfg.batching_mode
         # serial mode issues two dispatch groups per step — double buffering
-        # would interleave their completions; fall back to the sync loop
+        # would interleave their completions; fall back to the sync loop.
+        # pipeline_depth 1 means "nothing in flight": also the sync loop.
+        depth = cfg.pipeline_depth
+        if depth is None:
+            depth = int(os.environ.get("REPRO_PIPELINE_DEPTH", "2") or 2)
+        depth = max(1, int(depth))
         self.async_scheduling = bool(cfg.async_scheduling) and \
-            cfg.batching_mode != "serial"
+            cfg.batching_mode != "serial" and depth > 1
+        self.pipeline_depth = depth if self.async_scheduling else 1
+        dev = cfg.device_sampling
+        if dev is None:
+            dev = self.pipeline_depth > 2
+        self.device_sampling = bool(dev) and self.async_scheduling
+        assert self.pipeline_depth <= 2 or self.device_sampling, (
+            "pipeline_depth > 2 requires device_sampling: with host "
+            "sampling every queued step's decode tokens would need a host "
+            "patch, capping the ring at one slot")
         baseline = cfg.memory_mode == "paged-baseline"
         self.mgr = JengaKVCacheManager(
             model.kv_specs(),
@@ -225,15 +282,24 @@ class Engine:
         self.encoder_runs = 0
         self.mm_seen: set = set()
         self.finished: List[Request] = []
-        self._inflight: Optional[_InflightStep] = None
+        # ring of dispatched-but-not-completed steps, oldest first. With
+        # host sampling the capacity is pinned to 1 (every queued plan's
+        # decode tokens need the previous step's host sample); device
+        # sampling raises it to pipeline_depth - 1.
+        self._inflight: Deque[_InflightStep] = deque()
+        self._ring_capacity = (self.pipeline_depth - 1) \
+            if self.device_sampling else 1
         # async-scheduling reconciliation counters: segments killed because
         # their request finished while speculatively planned, and pages
-        # rolled back from those speculative +1 commitments
+        # rolled back from those speculative commitments
         self.spec_kills = 0
         self.spec_rollback_pages = 0
         # runner attention-work totals already folded into StepMetrics
         # (the runner accumulates across dispatches; steps record deltas)
         self._attn_seen = (0, 0, 0.0, 0.0)
+        self._bytes_seen = 0
+        self._sample_ms = 0.0           # host sampling time this step
+        self._last_complete_t = 0.0     # timing split (queue vs compute)
 
     # ------------------------------------------------- baseline semantics
     def _apply_baseline_semantics(self):
@@ -308,82 +374,147 @@ class Engine:
 
     # ---------------------------------------------------------- async step
     def _step_async(self) -> Optional[StepMetrics]:
-        """One double-buffered step: plan + host-build step N+1 (the part
-        the in-flight dispatch hides), THEN block on step N's logits,
-        sample/advance it, reconcile plan N+1 against what actually
-        happened (kill segments of requests that finished, roll back their
-        speculative pages, patch the now-known decode token ids), and
-        dispatch N+1 without waiting for it."""
-        inf, self._inflight = self._inflight, None
-        if not self.scheduler.has_work() and inf is None:
+        """One pipelined step: plan + host-build the next step (the part
+        the in-flight dispatches hide), THEN complete the oldest in-flight
+        step(s) until a ring slot is free, reconcile the new plan AND every
+        still-queued plan against what actually happened (kill segments of
+        requests that finished, roll back their speculative pages, patch
+        or board-feed the decode token ids), and dispatch the new step
+        without waiting for it."""
+        if not self.scheduler.has_work() and not self._inflight:
             return None
 
-        # --- phase 1: plan step N+1 while step N executes on device
+        # --- phase 1: plan the next step while the ring executes on device.
+        # Effective positions count every VALID queued row (stale-epoch
+        # rows — preempted or restarted while queued — are dead weight the
+        # completion will skip, so they must not advance c_eff); samples
+        # in flight are counted so will_finish fires at the same position
+        # the sync loop would stop scheduling at.
         t0 = time.perf_counter()
-        inflight_toks: Dict[str, int] = {}
-        if inf is not None:
-            for i, s in enumerate(inf.plan.scheduled):
-                if inf.live[i]:
-                    inflight_toks[s.req.rid] = s.num_tokens
-        plan = self.scheduler.schedule(inflight=inflight_toks)
+        inflight_info: Dict[str, Tuple[int, int]] = {}
+        for qinf in self._inflight:
+            for i, s in enumerate(qinf.plan.scheduled):
+                req, seq = s.req, s.req.seq
+                if not qinf.live[i] or req.status != Status.RUNNING \
+                        or seq.epoch != qinf.epochs[i]:
+                    continue
+                t, sm = inflight_info.get(req.rid, (0, 0))
+                samples = 1 if s.start + s.num_tokens >= len(req.prompt) \
+                    else 0
+                inflight_info[req.rid] = (t + s.num_tokens, sm + samples)
+        plan = self.scheduler.schedule(inflight=inflight_info)
         self.runner.apply_copies(plan.copy_ops)
         prepared = None
         if plan.scheduled:
             self._count_encoder_runs(plan.scheduled)
             prepared = self.runner.prepare(
                 [(s.req, s.num_tokens, s.start) for s in plan.scheduled],
-                packed=self.cfg.batching_mode == "packed")
+                packed=self.cfg.batching_mode == "packed",
+                sample=self.device_sampling,
+                board_feed=self.device_sampling)
         build_ms = (time.perf_counter() - t0) * 1e3
 
-        # --- phase 2: complete step N (blocks on its logits)
-        done, wait_ms = self._complete(inf)
+        # --- phase 2: complete the oldest step(s). Completing down to
+        # (capacity - 1) before a new dispatch keeps at most
+        # ``pipeline_depth - 1`` steps queued; a planless call (drain, or
+        # nothing schedulable under pressure) completes the WHOLE ring —
+        # the host has nothing to overlap anyway, and every completed
+        # result (finishes, freed pages) can only improve the next
+        # schedule. This also keeps step counts depth-independent: deeper
+        # rings don't pay extra one-completion-per-call shutdown steps.
+        done: List[Request] = []
+        wait_ms = queue_ms = compute_ms = 0.0
+        target = self._ring_capacity - 1 if prepared is not None else 0
+        while len(self._inflight) > target:
+            d, w, q, c = self._complete(self._inflight.popleft())
+            done.extend(d)
+            wait_ms += w
+            queue_ms += q
+            compute_ms += c
 
-        # --- phase 3: reconcile plan N+1 against step N's actual outcome
+        # --- phase 3: reconcile the new plan AND every queued plan
+        # against the completed steps' actual outcomes
         live = [True] * len(plan.scheduled)
         seg_of = {s.req.rid: i for i, s in enumerate(plan.scheduled)}
         for req in done:
+            # finished while speculative decodes were already planned (in
+            # the new plan and/or deeper ring slots): neutralize every such
+            # segment, then pop ALL pages committed for never-computed
+            # tokens in one trailing rollback.
+            killed = False
             si = seg_of.get(req.rid)
             if si is not None:
-                # EOS'd while its speculative +1 decode was already planned:
-                # neutralize the segment and pop the page committed for the
-                # never-computed token before releasing the request.
                 prepared.kill_segment(si)
                 live[si] = False
                 self.spec_kills += 1
+                killed = True
+            for qinf in self._inflight:
+                for i, s in enumerate(qinf.plan.scheduled):
+                    if s.req.rid == req.rid and qinf.live[i]:
+                        qinf.live[i] = False
+                        self.spec_kills += 1
+                        killed = True
+            if killed:
                 self.spec_rollback_pages += self.mgr.rollback_tokens(
                     req.seq, req.seq.num_computed)
             self._finish(req)
         if prepared is not None:
+            # host sampling: decode tokens sampled at completion above are
+            # known now — patch them in. (Device sampling board-fed them
+            # at prepare; pending is already empty.)
             for si in list(prepared.pending):
                 s = plan.scheduled[si]
                 prepared.patch_token(si, s.req.seq.tokens[s.start])
 
-        # --- phase 4: dispatch step N+1 (async; completes next call)
+        # --- phase 4: dispatch the new step (async; completes in a later
+        # call, once it reaches the head of the ring)
         slots_before = self.runner.slots_dispatched
         tokens_before = self.runner.tokens_dispatched
+        issue_ms = 0.0
         if prepared is not None and any(live):
             epochs = [s.req.seq.epoch for s in plan.scheduled]
+            ti = time.perf_counter()
             handle = self.runner.dispatch(self.params, prepared)
-            self._inflight = _InflightStep(plan, handle, epochs, live,
-                                           step=self.step_count)
+            issue_ms = (time.perf_counter() - ti) * 1e3
+            self._inflight.append(_InflightStep(
+                plan, handle, epochs, live, step=self.step_count,
+                dispatched_at=ti))
         return self._record_metrics(
             plan, slots_before, build_ms, wait_ms,
-            tokens=self.runner.tokens_dispatched - tokens_before)
+            tokens=self.runner.tokens_dispatched - tokens_before,
+            issue_ms=issue_ms, queue_ms=queue_ms, compute_ms=compute_ms)
 
-    def _complete(self, inf: Optional[_InflightStep]):
-        """Fetch an in-flight step's logits and run its delayed
-        sample/advance. Segments whose request was preempted while in
-        flight (stale epoch) or killed at dispatch are skipped — recompute
-        preemption regenerates their tokens deterministically. Returns
-        (finished requests, ms blocked on the fetch) — finish itself is
-        deferred to the caller so it can reconcile the next plan first,
+    def _complete(self, inf: _InflightStep):
+        """Fetch an in-flight step's results and run its delayed
+        sample/advance. Device sampling blocks on the (segments,) int32
+        token vector (4 bytes/segment) and only fetches logits rows under
+        ``record_sample_logits``; host sampling blocks on the full logits.
+        Segments whose request was preempted while in flight (stale epoch)
+        or killed at reconciliation are skipped — recompute preemption
+        regenerates their tokens deterministically. Returns (finished
+        requests, fetch-block ms, queue ms, compute ms) — finish itself is
+        deferred to the caller so it can reconcile the queued plans first,
         and only the device wait is timed (host bookkeeping after the
         fetch is not dispatch latency)."""
-        if inf is None:
-            return [], 0.0
         t0 = time.perf_counter()
-        logits = self.runner.fetch(inf.handle, len(inf.plan.scheduled))
-        wait_ms = (time.perf_counter() - t0) * 1e3
+        n = len(inf.plan.scheduled)
+        tokens = logits = None
+        if self.device_sampling:
+            tokens = self.runner.fetch_tokens(inf.handle, n)
+            if self.cfg.record_sample_logits:
+                logits = self.runner.fetch(inf.handle, n)
+        else:
+            logits = self.runner.fetch(inf.handle, n)
+        now = time.perf_counter()
+        wait_ms = (now - t0) * 1e3
+        # host-observed pipeline split: time queued behind the previous
+        # completion vs time actually computing (estimates — the device
+        # executes dispatches in order, so the previous completion bounds
+        # this step's start from below)
+        prev = self._last_complete_t or inf.dispatched_at
+        queue_ms = max(0.0, (prev - inf.dispatched_at) * 1e3)
+        compute_ms = max(0.0, (now - max(inf.dispatched_at, prev)) * 1e3)
+        self._last_complete_t = now
         done: List[Request] = []
         post_ops: List[StateCopyOp] = []
         for i, s in enumerate(inf.plan.scheduled):
@@ -393,15 +524,19 @@ class Engine:
                     or seq.num_computed != s.start:
                 continue
             # stamp with the COMPLETED step's index, not the current call's
-            # (sync records the sampling step; async samples one call later)
-            post_ops.extend(self._advance(s, logits[i], done=done,
-                                          step=inf.step))
+            # (sync records the sampling step; async samples k calls later)
+            post_ops.extend(self._advance(
+                s, None if logits is None else logits[i],
+                done=done, step=inf.step,
+                token=None if tokens is None else int(tokens[i])))
         self.runner.apply_copies(post_ops)
-        return done, wait_ms
+        return done, wait_ms, queue_ms, compute_ms
 
     def _record_metrics(self, plan: StepPlan, slots_before: int,
                         build_ms: float, disp_ms: float,
-                        tokens: Optional[int] = None) -> StepMetrics:
+                        tokens: Optional[int] = None,
+                        issue_ms: float = 0.0, queue_ms: float = 0.0,
+                        compute_ms: float = 0.0) -> StepMetrics:
         """``batched_tokens``/``dispatched_slots``/``pad_slots`` describe
         what was actually DISPATCHED (async: killed speculative segments'
         tokens drop out and their slots count as padding waste; a fully
@@ -429,12 +564,19 @@ class Engine:
             pad_slots=max(0, slots - tokens),
             host_build_ms=build_ms,
             dispatch_ms=disp_ms,
+            dispatch_issue_ms=issue_ms,
+            dispatch_queue_ms=queue_ms,
+            dispatch_compute_ms=compute_ms,
+            host_sample_ms=self._sample_ms,
+            sampled_bytes_fetched=r.bytes_fetched - self._bytes_seen,
             kv_blocks_scanned=attn_delta[0],
             kv_blocks_skipped=attn_delta[1],
             attn_flops_modeled=attn_delta[2],
             attn_bytes_modeled=attn_delta[3],
         )
         self.metrics.append(m)
+        self._sample_ms = 0.0
+        self._bytes_seen = r.bytes_fetched
         self.step_count += 1
         if self.autotuner is not None and self.autotuner.observe(m):
             self.scheduler.set_budgets(self.autotuner.budget,
@@ -454,16 +596,20 @@ class Engine:
                     self.encoder_runs += 1
                     self.mm_seen.add(it.mm_hash)
 
-    def _advance(self, s: ScheduledSeq, logits: np.ndarray,
+    def _advance(self, s: ScheduledSeq, logits: Optional[np.ndarray],
                  done: Optional[List[Request]] = None,
-                 step: Optional[int] = None) -> List[StateCopyOp]:
+                 step: Optional[int] = None,
+                 token: Optional[int] = None) -> List[StateCopyOp]:
         """Post-dispatch bookkeeping for one scheduled sequence: record the
         computed tokens with the manager, sample once past the prompt, and
         return any state-checkpoint copy ops for batched execution. With
         ``done`` given (async), finish detection is deferred to the caller
         instead of retiring the request immediately; ``step`` overrides the
         step index stamped on first tokens/finishes (async completes step N
-        during call N+1 — stamps must match the synchronous loop's)."""
+        k calls later — stamps must match the synchronous loop's). With
+        ``token`` given (device sampling), the pick already happened in the
+        dispatch's fused tail; ``logits`` may then be None unless rows are
+        being recorded."""
         req, seq = s.req, s.req.seq
         step = self.step_count if step is None else step
         ops = self.mgr.advance(seq, s.num_tokens)
@@ -471,7 +617,14 @@ class Engine:
             self.mgr.consume_mm(seq, seq.num_computed)
         self.mgr.touch(seq)
         if not req.in_prefill:          # decode, or prompt just completed
-            tok = self._sample(req, logits)
+            if token is not None:
+                if self.cfg.record_sample_logits:
+                    v = self.model.cfg.vocab_size
+                    self.sample_log.setdefault(req.rid, []).append(
+                        np.asarray(logits[:v], np.float32).copy())
+                tok = token
+            else:
+                tok = self._sample(req, logits)
             req.output.append(tok)
             seq.append_token(tok)
             if req.first_token_step is None:
@@ -485,21 +638,33 @@ class Engine:
         return ops
 
     def _sample(self, req: Request, logits: np.ndarray) -> int:
+        """Host-side token pick over one FULL-WIDTH (v_pad) logits row.
+        Same semantics as the device sampler (serving.sampler is the
+        single source of truth): tie-banded greedy, or the seeded
+        temperature/top-k draw keyed on (seed, rid_hash, position) — the
+        temperature path runs the device computation itself (host_sample)
+        so host- and device-sampled outputs are identical."""
         v = self.model.cfg.vocab_size
-        logits = logits[:v]
         if self.cfg.record_sample_logits:
             self.sample_log.setdefault(req.rid, []).append(
-                np.asarray(logits, np.float32).copy())
-        if req.sampling.temperature <= 0:
+                np.asarray(logits[:v], np.float32).copy())
+        t0 = time.perf_counter()
+        sp = req.sampling
+        if sp.temperature <= 0:
             # greedy with a deterministic tie-break on the fp32 logits
             # (lowest token id within TIE_EPS of the max — see TIE_EPS)
-            return greedy_token(logits)
-        rng = np.random.default_rng(
-            (req.sampling.seed, len(req.output), hash(req.rid) & 0xFFFF))
-        p = logits / req.sampling.temperature
-        p = np.exp(p - p.max())
-        p /= p.sum()
-        return int(rng.choice(v, p=p))
+            tok = greedy_token(logits[:v])
+        else:
+            # position of the token being sampled == len(prompt + output);
+            # layout- and batch-independent, so any scheduling mode
+            # reproduces the same draw. The full padded row goes in: the
+            # heads emit pad columns at -1e30 and the Gumbel noise shape
+            # depends on the row width.
+            tok = host_sample(logits, sp.temperature, sp.top_k,
+                              rid_hash(req.rid), len(req.seq.tokens),
+                              sp.seed)
+        self._sample_ms += (time.perf_counter() - t0) * 1e3
+        return tok
 
     def _finish(self, req: Request) -> None:
         if req.finished_step is None:   # async stamps at completion time
@@ -509,10 +674,15 @@ class Engine:
         self.finished.append(req)
 
     # ----------------------------------------------------------------- run
+    @property
+    def has_inflight(self) -> bool:
+        """Whether any dispatched step is still awaiting completion."""
+        return bool(self._inflight)
+
     def run_until_done(self, max_steps: int = 10_000) -> List[Request]:
         """Drive steps until every request finished (draining the in-flight
-        step on shutdown) or ``max_steps`` is hit."""
-        while (self.scheduler.has_work() or self._inflight is not None) \
+        ring on shutdown) or ``max_steps`` is hit."""
+        while (self.scheduler.has_work() or self.has_inflight) \
                 and self.step_count < max_steps:
             self.step()
         return self.finished

@@ -18,6 +18,7 @@ class Status(enum.Enum):
 class SamplingParams:
     max_new_tokens: int = 16
     temperature: float = 0.0        # 0 = greedy
+    top_k: int = 0                  # 0 = no truncation (temperature > 0 only)
     eos_token: Optional[int] = None
     seed: int = 0
 

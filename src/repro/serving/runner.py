@@ -63,6 +63,7 @@ from ..core.request import SequenceState
 from ..core.spec import lcm as _lcm
 from ..models.lm import DecodeBatch
 from .request import Request
+from .sampler import get_sample_fn, inject_tokens, rid_hash
 
 SENTINEL_POS = np.int32(1 << 29)
 
@@ -97,13 +98,29 @@ def _norm_items(items) -> List[Tuple[Request, int, int]]:
 
 
 @dataclasses.dataclass
+class StepHandle:
+    """Device handles of one dispatched step: the per-segment logits (and,
+    when the dispatch carried a fused sampling tail, the sampled token
+    vector). ``fetch_tokens`` blocks on 4 bytes per segment; ``fetch``
+    on the full ``(segments, v_pad)`` fp32 matrix."""
+
+    logits: object
+    tokens: object = None
+    n: int = 0
+
+
+@dataclasses.dataclass
 class PreparedStep:
     """One plan's device batch, still host-side numpy (phase 1 of 3).
 
     ``pending`` lists segment indices whose (single) decode token id was
     not known at build time — the in-flight step samples it; the engine
     calls ``patch_token`` once the sample lands, or ``kill_segment`` if
-    the request turned out to have finished instead."""
+    the request turned out to have finished instead. With device
+    sampling, pending decode rows are instead moved to ``board_fed``:
+    their token id is read ON DEVICE from the sampled-token board
+    (``tok_src`` holds the board slot per token position, -1 elsewhere),
+    so no host patch is needed and >1 step can stay in flight."""
 
     arrs: Dict[str, object]           # DecodeBatch field -> numpy / dict
     info: dict
@@ -111,6 +128,9 @@ class PreparedStep:
     packed: bool
     pending: List[int]
     dead: set = dataclasses.field(default_factory=set)
+    samp: Optional[dict] = None       # fused sampling tail metadata
+    tok_src: Optional[np.ndarray] = None
+    board_fed: List[int] = dataclasses.field(default_factory=list)
 
     @property
     def n(self) -> int:
@@ -136,6 +156,12 @@ class PreparedStep:
         self.dead.add(si)
         if si in self.pending:
             self.pending.remove(si)
+        if si in self.board_fed:
+            self.board_fed.remove(si)
+        if self.samp is not None:
+            # dead segment: no board write, no random draw needed
+            self.samp["dst"][si] = -1
+            self.samp["temps"][si] = 0.0
         a = self.arrs
         if self.packed:
             off, nt = self.info["seg_off"][si]
@@ -165,6 +191,12 @@ class PreparedStep:
                 v[0, 0, si, :] = SENTINEL_POS
         for v in a["state_eids"].values():
             v[0, si] = -1
+        if self.tok_src is not None:
+            if self.packed:
+                off, nt = self.info["seg_off"][si]
+                self.tok_src[0, off:off + nt] = -1
+            else:
+                self.tok_src[si, :] = -1
 
 
 class _SeqMirror:
@@ -252,6 +284,17 @@ class ModelRunner:
         self.kv_blocks_skipped = 0
         self.attn_flops_modeled = 0.0
         self.attn_bytes_modeled = 0.0
+        # device->host traffic (fetch/fetch_tokens), for the pipeline A/B
+        self.bytes_fetched = 0
+        # sampled-token board: persistent device int32 vector the fused
+        # sampling tail scatters into and later dispatches read from
+        # (see serving.sampler). Slots are per-request (rid-keyed, with a
+        # free list) unless the caller passes explicit board_dst/board_src
+        # (spec decode chains).
+        self._board = jnp.zeros((64,), jnp.int32)
+        self._board_slots: Dict[str, int] = {}
+        self._board_free: List[int] = []
+        self._board_top = 0
 
     # -------------------------------------------------------------- mirrors
     def _mirror(self, seq: SequenceState) -> _SeqMirror:
@@ -291,8 +334,35 @@ class ModelRunner:
         return m
 
     def forget(self, rid: str) -> None:
-        """Drop the mirror of a finished request."""
+        """Drop the mirror (and board slot) of a finished request. The
+        freed board slot may be handed to a new request immediately:
+        device dispatch order guarantees any still-queued write of the
+        old owner lands before the new owner's first write."""
         self._mirrors.pop(rid, None)
+        slot = self._board_slots.pop(rid, None)
+        if slot is not None:
+            self._board_free.append(slot)
+
+    # ----------------------------------------------------------- token board
+    def board_slot(self, rid: str) -> int:
+        """Stable board slot of a request (allocated on first use)."""
+        s = self._board_slots.get(rid)
+        if s is None:
+            if self._board_free:
+                s = self._board_free.pop()
+            else:
+                s = self._board_top
+                self._board_top += 1
+            self._board_slots[rid] = s
+        return s
+
+    def _ensure_board(self, cap: int) -> None:
+        cur = int(self._board.shape[0])
+        if cap <= cur:
+            return
+        new_cap = _pow2(cap, 64)
+        self._board = jnp.concatenate(
+            [self._board, jnp.zeros((new_cap - cur,), jnp.int32)])
 
     # ------------------------------------------- shared per-item builders
     def _mm_enc_flags(self, items) -> Tuple[bool, bool]:
@@ -393,18 +463,82 @@ class ModelRunner:
                     attn_flops_modeled=flops, attn_bytes_modeled=bytes_)
 
     # ----------------------------------------------------------- batching
-    def prepare(self, items, packed: bool = True) -> PreparedStep:
+    def prepare(self, items, packed: bool = True, sample: bool = False,
+                board_feed: bool = False, board_dst: Optional[List[int]] = None,
+                board_src: Optional[List[int]] = None) -> PreparedStep:
         """Phase 1: flatten one scheduler step — ``items`` is
         [(request, num_tokens[, start])] with ragged per-sequence token
         counts — into a HOST-side device batch: token-packed stream
-        (default) or padded (B, T) rows."""
+        (default) or padded (B, T) rows.
+
+        ``sample=True`` attaches a fused sampling tail (per-segment
+        greedy/temperature pick on device, scattered into the token
+        board at ``board_dst[si]`` — default: the request's rid slot).
+        ``board_feed=True`` converts pending decode rows into on-device
+        board reads from ``board_src[si]`` (default: rid slot) instead
+        of requiring a host ``patch_token``."""
         items = _norm_items(items)
         if packed:
             arrs, info = self._build_host_packed(items)
         else:
             arrs, info = self._build_host_padded(items)
-        return PreparedStep(arrs=arrs, info=info, items=items, packed=packed,
+        prep = PreparedStep(arrs=arrs, info=info, items=items, packed=packed,
                             pending=info.pop("pending"))
+        if sample:
+            self._attach_sampling(prep, board_dst)
+        if board_feed:
+            self._attach_board_feed(prep, board_src)
+        return prep
+
+    def _attach_sampling(self, prep: PreparedStep,
+                         board_dst: Optional[List[int]] = None) -> None:
+        """Per-segment sampling metadata for the fused dispatch tail,
+        sized to the segment bucket (padded rows sample garbage that is
+        never read). The random key per row is (seed, rid_hash,
+        position-of-sampled-token) — layout- and batch-independent."""
+        S = prep.arrs["seq_lens"].shape[0]
+        samp = dict(temps=np.zeros((S,), np.float32),
+                    top_ks=np.zeros((S,), np.int32),
+                    rhs=np.zeros((S,), np.uint32),
+                    poss=np.zeros((S,), np.int32),
+                    seeds=np.zeros((S,), np.int32),
+                    dst=np.full((S,), -1, np.int32),
+                    need_random=False)
+        for si, (r, nt, start) in enumerate(prep.items):
+            sp = r.sampling
+            samp["temps"][si] = max(0.0, sp.temperature)
+            samp["top_ks"][si] = max(0, getattr(sp, "top_k", 0))
+            samp["rhs"][si] = rid_hash(r.rid)
+            samp["poss"][si] = start + nt
+            samp["seeds"][si] = sp.seed
+            samp["dst"][si] = (board_dst[si] if board_dst is not None
+                               else self.board_slot(r.rid))
+            if sp.temperature > 0 and start + nt >= len(r.prompt):
+                samp["need_random"] = True
+        prep.samp = samp
+
+    def _attach_board_feed(self, prep: PreparedStep,
+                           board_src: Optional[List[int]] = None) -> None:
+        """Convert pending (speculative, token-not-yet-sampled) decode
+        rows into on-device board reads: the dispatch that samples their
+        input token was issued earlier, so device execution order makes
+        the read see the right value with no host round-trip."""
+        if not prep.pending:
+            return
+        tok_src = np.full(prep.arrs["tokens"].shape, -1, np.int32)
+        for si in list(prep.pending):
+            r, nt, start = prep.items[si]
+            assert nt == 1, (si, nt)
+            slot = (board_src[si] if board_src is not None
+                    else self.board_slot(r.rid))
+            if prep.packed:
+                off, _ = prep.info["seg_off"][si]
+                tok_src[0, off] = slot
+            else:
+                tok_src[si, 0] = slot
+            prep.pending.remove(si)
+            prep.board_fed.append(si)
+        prep.tok_src = tok_src
 
     def build_plan(self, items, packed: bool = True
                    ) -> Tuple[DecodeBatch, dict]:
@@ -667,13 +801,43 @@ class ModelRunner:
                                  attention_impl=self.attention_impl),
                          donate_argnums=(1,))
             self._steps[key] = fn
-        logits, self.buffer = fn(params, self.buffer, self._to_batch(prep.arrs))
-        return logits
+        batch = self._to_batch(prep.arrs)
+        if prep.tok_src is not None and prep.board_fed:
+            # feed still-in-flight decode tokens from the board, on device
+            batch = dataclasses.replace(
+                batch, tokens=inject_tokens(batch.tokens,
+                                            jnp.asarray(prep.tok_src),
+                                            self._board))
+        logits, self.buffer = fn(params, self.buffer, batch)
+        tokens_h = None
+        if prep.samp is not None:
+            sm = prep.samp
+            self._ensure_board(int(sm["dst"].max(initial=-1)) + 1)
+            sfn = get_sample_fn(sm["need_random"])
+            tokens_h, self._board = sfn(
+                logits, self._board, jnp.asarray(sm["dst"]),
+                jnp.asarray(sm["temps"]), jnp.asarray(sm["top_ks"]),
+                jnp.asarray(sm["rhs"]), jnp.asarray(sm["poss"]),
+                jnp.asarray(sm["seeds"]))
+        return StepHandle(logits=logits, tokens=tokens_h, n=info["n"])
 
     def fetch(self, handle, n: int) -> np.ndarray:
         """Phase 3: block on a dispatched step's logits; one row per
         segment, in plan order."""
-        return np.asarray(handle[:n], np.float32)
+        h = handle.logits if isinstance(handle, StepHandle) else handle
+        out = np.asarray(h[:n], np.float32)
+        self.bytes_fetched += out.nbytes
+        return out
+
+    def fetch_tokens(self, handle: StepHandle,
+                     n: Optional[int] = None) -> np.ndarray:
+        """Block on a dispatched step's device-sampled tokens: 4 bytes
+        per segment instead of the full vocab row."""
+        assert handle.tokens is not None, "dispatch had no sampling tail"
+        n = handle.n if n is None else n
+        out = np.asarray(handle.tokens[:n], np.int32)
+        self.bytes_fetched += out.nbytes
+        return out
 
     def run_plan(self, params, items, packed: bool = True) -> np.ndarray:
         """Execute one mixed step plan in a single jitted dispatch

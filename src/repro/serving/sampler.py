@@ -1,0 +1,162 @@
+"""Device-side sampling: the single source of truth for token selection.
+
+Both the host path (``Engine._sample``) and the fused dispatch tail
+(``ModelRunner.dispatch``) pick tokens through the functions here, so
+greedy is bit-identical across them and seeded temperature/top-k draws
+are reproducible and LAYOUT-INDEPENDENT: the random key is derived from
+``(seed, rid_hash, position)``, never from batch shape or slot index.
+
+Greedy tie handling
+-------------------
+bf16 reduction-order noise (chunked vs whole prefill, MoE expert tiling,
+ref vs kernel attention) perturbs fp32 logits by ~1e-4, enough to flip
+an argmax between two near-equal candidates depending on batch layout.
+Greedy therefore resolves WITHIN A TIE BAND: any token whose fp32 logit
+is within ``TIE_EPS`` of the row max is tie-eligible, and the lowest
+token id in the band wins. On device this is ``argmax(x >= max - eps)``
+— boolean argmax returns the first True, i.e. the lowest id in the band
+— which is bit-identical to the host ``np.flatnonzero`` form because
+max/compare are exact fp32 ops on the same values. No fixed band is
+fully layout-independent (band-edge flips measured at ~1e-3..3e-2), so
+cross-layout tests remain fork-aware (``assert_greedy_equiv``).
+
+Temperature / top-k
+-------------------
+``logits/T`` -> fp32 log-softmax -> top-k truncation (kth-value
+threshold; ``top_k <= 0`` keeps everything) -> Gumbel-max draw, with the
+winning index picked through the same tie band so an exactly-replayed
+row reproduces exactly. Pad vocab columns never need masking here: the
+serve heads emit them at ``NEG`` (see ``models.tp.mask_pad_vocab``), so
+they carry zero probability and sort last.
+
+The token board
+---------------
+The sampler scatters each segment's sampled token into a persistent
+device-resident int32 "board" at a per-request slot. A later dispatch
+whose input token is still in flight reads it back on device
+(``inject_tokens``), which is what lets the engine keep >1 step in
+flight without a host round-trip. Host-side arrays use -1 for "no
+write"/"no read"; the scatter converts -1 to ``board.size`` and relies
+on ``mode="drop"`` (a raw -1 index would WRAP in a JAX scatter).
+"""
+import zlib
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Greedy tie band over fp32 logits; see module docstring.
+TIE_EPS = 5e-3
+# Matches the pad-vocab mask value in models.tp.mask_pad_vocab: large
+# enough that exp() underflows to exactly 0.0, small enough to stay
+# finite in fp32 arithmetic.
+NEG = -1e30
+
+
+def greedy_token(logits) -> int:
+    """Host greedy pick: lowest token id within TIE_EPS of the row max."""
+    logits = np.asarray(logits, np.float32)
+    return int(np.flatnonzero(logits >= logits.max() - TIE_EPS)[0])
+
+
+def rid_hash(rid: str) -> int:
+    """Stable 32-bit request-id hash (Python ``hash`` is process-salted)."""
+    return zlib.crc32(rid.encode()) & 0xFFFFFFFF
+
+
+# ----------------------------------------------------------- device pieces
+def _band_pick(x):
+    """Lowest index within TIE_EPS of the row max (trailing axis)."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    return jnp.argmax(x >= m - TIE_EPS, axis=-1).astype(jnp.int32)
+
+
+def _derive_key(seed, rh, pos):
+    """(seed, rid_hash, position) -> PRNG key; layout-independent."""
+    k = jax.random.PRNGKey(seed)
+    k = jax.random.fold_in(k, rh)
+    return jax.random.fold_in(k, pos)
+
+
+def _perturbed_scores(logits, temp, top_k, key):
+    """fp32 log-softmax of logits/T, top-k truncated, Gumbel-perturbed.
+
+    The band-argmax of the result is a draw from the truncated softmax
+    (Gumbel-max trick); temp <= 0 rows never read these scores."""
+    s = logits.astype(jnp.float32) / jnp.maximum(temp, 1e-6)
+    z = jax.nn.log_softmax(s, axis=-1)
+    v = s.shape[-1]
+    kth = jnp.sort(s)[::-1][jnp.clip(top_k - 1, 0, v - 1)]
+    keep = (top_k <= 0) | (s >= kth)
+    z = jnp.where(keep, z, NEG)
+    # clamp strictly inside (0, 1): u == 1.0 (possible after float32
+    # rounding) would give -log(-log(u)) == +inf for EVERY column,
+    # including truncated ones
+    u = jax.random.uniform(key, s.shape, jnp.float32, 1e-7, 1.0 - 1e-7)
+    return z - jnp.log(-jnp.log(u))
+
+
+def _sample_batch(logits, board, dst, temps, top_ks, rhs, poss, seeds, *,
+                  need_random):
+    x = logits.astype(jnp.float32)
+    toks = _band_pick(x)
+    if need_random:
+        keys = jax.vmap(_derive_key)(seeds, rhs, poss)
+        g = jax.vmap(_perturbed_scores)(x, temps, top_ks, keys)
+        toks = jnp.where(temps > 0, _band_pick(g), toks)
+    # -1 == "no write": redirect out of bounds and let the scatter drop it.
+    dstc = jnp.where(dst < 0, board.shape[0], dst).astype(jnp.int32)
+    board = board.at[dstc].set(toks, mode="drop")
+    return toks, board
+
+
+# jit caches are module-level so every engine/runner in the process (and
+# the draft+target runners of a spec-decode pair) shares the compiled
+# sampler; jit retraces per shape, so the only explicit key is the
+# static need_random flag. The board is donated (it is threaded through
+# dispatches exactly like the KV buffer); the logits are NOT — the
+# handle stays fetchable for record_sample_logits.
+_SAMPLE_FNS = {}
+_INJECT_FN = None
+_HOST_FN = None
+
+
+def get_sample_fn(need_random: bool):
+    fn = _SAMPLE_FNS.get(bool(need_random))
+    if fn is None:
+        fn = jax.jit(partial(_sample_batch, need_random=bool(need_random)),
+                     donate_argnums=(1,))
+        _SAMPLE_FNS[bool(need_random)] = fn
+    return fn
+
+
+def inject_tokens(tokens, src, board):
+    """Replace tokens at positions where ``src >= 0`` with board[src]."""
+    global _INJECT_FN
+    if _INJECT_FN is None:
+        def _inject(tokens, src, board):
+            fed = jnp.take(board, jnp.clip(src, 0, board.shape[0] - 1),
+                           axis=0)
+            return jnp.where(src >= 0, fed.astype(tokens.dtype), tokens)
+        _INJECT_FN = jax.jit(_inject)
+    return _INJECT_FN(tokens, src, board)
+
+
+def host_sample(row, temperature, top_k, rh, pos, seed) -> int:
+    """Temperature/top-k draw for one FULL-WIDTH (v_pad) logits row.
+
+    Runs the exact device computation (same jitted graph shape as one
+    vmap lane) so the sync host path and the fused dispatch tail draw
+    identical tokens for identical rows. The row must be the full padded
+    vocab width as emitted by the serve heads — Gumbel noise shape
+    depends on it."""
+    global _HOST_FN
+    if _HOST_FN is None:
+        def _one(logits, temp, tk, rh, pos, seed):
+            key = _derive_key(seed, rh, pos)
+            return _band_pick(_perturbed_scores(logits, temp, tk, key))
+        _HOST_FN = jax.jit(_one)
+    return int(_HOST_FN(jnp.asarray(row, jnp.float32),
+                        jnp.float32(temperature), jnp.int32(top_k),
+                        jnp.uint32(rh), jnp.int32(pos), jnp.int32(seed)))

@@ -15,10 +15,12 @@ level). On failure the scheduler preempts the latest-arrival running
 request (vLLM recompute preemption) — preferring victims outside the plan,
 then shrinking the plan itself — and retries.
 
-ASYNC SCHEDULING (``Engine`` double-buffering): ``schedule(inflight=...)``
-plans the NEXT step while the previous one is still executing on the
-device. ``inflight`` maps request id -> tokens the in-flight step is
-computing; packing uses the EFFECTIVE position ``num_computed + inflight``
+ASYNC SCHEDULING (``Engine`` pipelining): ``schedule(inflight=...)``
+plans the NEXT step while up to ``pipeline_depth - 1`` earlier steps are
+still executing on the device. ``inflight`` maps request id ->
+``(tokens, samples)`` the in-flight ring is computing (a bare int is
+accepted as ``(tokens, tokens-will-sample)`` for direct callers); packing
+uses the EFFECTIVE position ``num_computed + inflight_tokens``
 (vLLM async-scheduling style):
 
   * an in-flight prefill chunk continues from its effective end;
@@ -27,8 +29,10 @@ computing; packing uses the EFFECTIVE position ``num_computed + inflight``
     token id is patched into the prepared batch when the logits land, and
     its +1 page commitment is rolled back (``mgr.rollback_tokens``) if the
     sample turns out to be EOS;
-  * a request whose in-flight sample deterministically exhausts
-    ``max_new_tokens`` is not schedulable — it WILL finish.
+  * a request whose in-flight SAMPLES deterministically exhaust
+    ``max_new_tokens`` is not schedulable — it WILL finish (with several
+    steps queued, each in-flight decode row past the prompt counts as one
+    sample).
 
 Preempting a request with tokens in flight releases its pages WITHOUT
 caching (``preempt_request(cache=False)``): the device is still mutating
@@ -144,8 +148,11 @@ class Scheduler:
         self.cfg.max_prefill_tokens_per_step = max_prefill_tokens_per_step
 
     # ------------------------------------------------------------ schedule
-    def schedule(self, inflight: Optional[Dict[str, int]] = None) -> StepPlan:
-        inflight = inflight or {}
+    def schedule(self, inflight: Optional[Dict[str, object]] = None
+                 ) -> StepPlan:
+        # normalize values to (tokens_in_flight, samples_in_flight)
+        inflight = {rid: v if isinstance(v, tuple) else (v, 1)
+                    for rid, v in (inflight or {}).items()}
         self._inflight_rids = frozenset(inflight)
 
         # 1) admit new requests while capacity allows; begin_request acquires
@@ -166,16 +173,18 @@ class Scheduler:
         def c_eff(req: Request) -> int:
             """Effective computed position: what the request will have once
             the in-flight step lands."""
-            return req.seq.num_computed + inflight.get(req.rid, 0)
+            return req.seq.num_computed + inflight.get(req.rid, (0, 0))[0]
 
         def will_finish(req: Request) -> bool:
-            """The in-flight step deterministically samples this request's
+            """The in-flight ring deterministically samples this request's
             last allowed token (max_new_tokens) — it cannot take more work.
             EOS finishes are NOT predictable; those are speculatively
             scheduled and reconciled by the engine (segment kill + page
             rollback)."""
+            samples = inflight.get(req.rid, (0, 0))[1]
             return (req.rid in inflight and c_eff(req) >= len(req.prompt)
-                    and req.num_generated + 1 >= req.sampling.max_new_tokens)
+                    and req.num_generated + samples
+                    >= req.sampling.max_new_tokens)
 
         schedulable = [r for r in self.running if not will_finish(r)]
 

@@ -1,0 +1,193 @@
+"""Device-side sampling + multi-slot pipeline (the fused dispatch tail).
+
+Covers the three contracts the pipeline rests on:
+
+  * greedy parity: the device band-argmax is bit-identical to the host
+    ``greedy_token`` form, and whole-engine greedy outputs are identical
+    across pipeline depths 1 (sync), 2 (double buffer, host sampling),
+    and 4 (ring + device sampling) for every model archetype;
+  * seeded temperature/top-k draws are keyed on (seed, rid_hash,
+    position) only, so packed/padded layouts and host/device samplers
+    all reproduce the same stochastic trajectory;
+  * EOS landing while deeper ring slots are still queued kills every
+    speculative segment and rolls its pages back — draining leaks
+    nothing even at depth 4.
+"""
+import numpy as np
+import pytest
+
+from conftest import assert_greedy_equiv, get_model, make_engine
+from repro.serving import Request, SamplingParams
+from repro.serving.sampler import (TIE_EPS, get_sample_fn, greedy_token,
+                                   host_sample, rid_hash)
+
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------- unit level
+def test_band_pick_matches_host_greedy_bitwise():
+    """The device sampler's boolean band-argmax must agree with the host
+    ``np.flatnonzero`` form on every row, including engineered near-ties
+    right at the band edge."""
+    rng = np.random.default_rng(0)
+    rows = rng.standard_normal((64, 128)).astype(np.float32)
+    # engineered ties: push a lower id into the band of the max
+    for r in range(0, 64, 4):
+        m = int(rows[r].argmax())
+        lo = (m + 37) % 128
+        rows[r, lo] = rows[r, m] - 0.5 * TIE_EPS
+    fn = get_sample_fn(False)
+    board = jnp.zeros((64,), jnp.int32)
+    toks, board = fn(jnp.asarray(rows), board,
+                     jnp.arange(64, dtype=jnp.int32),
+                     jnp.zeros((64,), jnp.float32),
+                     jnp.zeros((64,), jnp.int32),
+                     jnp.zeros((64,), jnp.uint32),
+                     jnp.zeros((64,), jnp.int32),
+                     jnp.zeros((64,), jnp.int32))
+    toks = np.asarray(toks)
+    for r in range(64):
+        assert toks[r] == greedy_token(rows[r]), r
+    # and the board scatter recorded exactly the same picks
+    assert np.array_equal(np.asarray(board), toks)
+
+
+def test_topk_membership_and_pad_immunity():
+    """Every temperature draw stays inside the top-k set of its row, and
+    -1e30 pad columns (the serve heads' masked vocab tail) can never be
+    drawn even under extreme logit magnitudes."""
+    rng = np.random.default_rng(1)
+    v, pad = 40, 24
+    for pos in range(20):
+        row = np.full((v + pad,), -1e30, np.float32)
+        row[:v] = rng.standard_normal(v) * (1e4 if pos % 5 == 0 else 3.0)
+        tok = host_sample(row, temperature=1.2, top_k=5,
+                          rh=rid_hash("rq"), pos=pos, seed=7)
+        top5 = set(np.argsort(row)[::-1][:5].tolist())
+        assert tok in top5, (pos, tok, sorted(top5))
+        assert tok < v
+    # reproducibility: identical (row, key) -> identical draw
+    row = rng.standard_normal(v + pad).astype(np.float32)
+    a = host_sample(row, 0.9, 0, rid_hash("x"), 3, 11)
+    b = host_sample(row, 0.9, 0, rid_hash("x"), 3, 11)
+    assert a == b
+
+
+# ------------------------------------------------------- greedy parity e2e
+def _submit_workload(eng, n=3, max_new=6, sampling_kw=None):
+    for i in range(n):
+        kw = dict(max_new_tokens=max_new)
+        kw.update(sampling_kw or {})
+        eng.submit(Request(rid=f"r{i}",
+                           prompt=[(7 * i + j) % 50 for j in range(6 + 3 * i)],
+                           sampling=SamplingParams(**kw)))
+    eng.run_until_done()
+    return {r.rid: list(r.output) for r in eng.finished}
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "h2o-danube-3-4b",
+                                  "qwen2-vl-2b", "zamba2-1.2b", "rwkv6-3b",
+                                  "whisper-tiny", "dbrx-132b"])
+def test_greedy_bit_identical_across_depths(arch):
+    """Depth 1 (sync), depth 2 (double buffer, host-sampled), and depth 4
+    (ring, device-sampled) plan identical dispatches for an EOS-free
+    workload, so greedy outputs must be BITWISE equal — the fork-aware
+    checker must report zero forks."""
+    outs, engs = {}, {}
+    legs = [(1, dict(async_scheduling=False)),
+            (2, dict(async_scheduling=True, pipeline_depth=2)),
+            (4, dict(async_scheduling=True, pipeline_depth=4))]
+    for depth, kw in legs:
+        eng, _ = make_engine(arch, record_sample_logits=True, **kw)
+        outs[depth] = _submit_workload(eng)
+        engs[depth] = eng
+    assert outs[1] == outs[2] == outs[4], (arch, outs)
+    assert engs[4].device_sampling and not engs[2].device_sampling
+    assert assert_greedy_equiv(engs[1], engs[4], label=arch) == set()
+    # device sampling really did keep host sampling out of the loop
+    assert sum(m.host_sample_ms for m in engs[4].metrics) == 0.0
+
+
+def test_seeded_sampling_reproducible_across_layouts_and_samplers():
+    """Temperature/top-k trajectories depend only on (seed, rid_hash,
+    position): packed vs padded layouts, sync host sampling vs depth-4
+    device sampling — four engines, one output set."""
+    sampling = dict(temperature=0.8, top_k=5, seed=42)
+    legs = dict(
+        packed_sync=dict(batching_mode="packed", async_scheduling=False),
+        padded_sync=dict(batching_mode="padded", async_scheduling=False),
+        packed_async2=dict(batching_mode="packed", async_scheduling=True,
+                           pipeline_depth=2),
+        packed_async4=dict(batching_mode="packed", async_scheduling=True,
+                           pipeline_depth=4),
+    )
+    outs = {}
+    for name, kw in legs.items():
+        eng, _ = make_engine("granite-3-2b", **kw)
+        outs[name] = _submit_workload(eng, max_new=8, sampling_kw=sampling)
+    ref = outs["packed_sync"]
+    for name, o in outs.items():
+        assert o == ref, (name, o, ref)
+    # a different seed must change the trajectory (16 draws at top_k=5)
+    eng, _ = make_engine("granite-3-2b", **legs["packed_sync"])
+    other = _submit_workload(eng, max_new=8,
+                             sampling_kw=dict(sampling, seed=43))
+    assert other != ref
+
+
+# ----------------------------------------------- EOS at depth 4, no leaks
+def test_eos_in_deep_ring_rolls_back_and_drains_clean():
+    """Arm EOS tokens mid-output (observed from a sync probe) and run at
+    depth 4: the finish is discovered while up to 3 speculative steps for
+    that request are still queued — every one must be killed, their page
+    commitments popped, and the drained pool fully restored."""
+    probe, _ = make_engine("granite-3-2b", enable_prefix_caching=False)
+    ref = _submit_workload(probe, n=4, max_new=10)
+    eos = {rid: out[len(out) // 2] for rid, out in ref.items()
+           if len(out) > 2}
+    assert eos    # greedy on the reduced model always emits > 2 tokens
+
+    eng, _ = make_engine("granite-3-2b", async_scheduling=True,
+                         pipeline_depth=4, enable_prefix_caching=False)
+    for i in range(4):
+        rid = f"r{i}"
+        eng.submit(Request(
+            rid=rid, prompt=[(7 * i + j) % 50 for j in range(6 + 3 * i)],
+            sampling=SamplingParams(max_new_tokens=10,
+                                    eos_token=eos.get(rid))))
+    eng.run_until_done()
+    outs = {r.rid: list(r.output) for r in eng.finished}
+    for rid, out in outs.items():
+        if rid in eos:
+            cut = ref[rid].index(eos[rid]) + 1
+            assert out == ref[rid][:cut], (rid, out, ref[rid], eos[rid])
+    assert eng.spec_kills >= 1, eng.spec_kills
+    eng.mgr.check_invariants()
+    stats = eng.mgr.memory_stats()
+    assert stats.used_units == 0, f"leaked referenced pages: {stats}"
+    assert stats.free_units == stats.total_units, stats
+
+
+# ----------------------------------------------------- traffic accounting
+def test_device_sampling_shrinks_fetch_traffic():
+    """The whole point of the tentpole: completion blocks on 4 bytes per
+    segment instead of a vocab-wide fp32 row. Same workload, host-sampled
+    depth 2 vs device-sampled depth 4 — fetched bytes collapse while
+    outputs stay identical."""
+    kw = dict(async_scheduling=True, enable_prefix_caching=False)
+    host_eng, cfg = make_engine("granite-3-2b", pipeline_depth=2, **kw)
+    host_out = _submit_workload(host_eng, n=4, max_new=12)
+    dev_eng, _ = make_engine("granite-3-2b", pipeline_depth=4, **kw)
+    dev_out = _submit_workload(dev_eng, n=4, max_new=12)
+    assert host_out == dev_out
+    host_bytes = sum(m.sampled_bytes_fetched for m in host_eng.metrics)
+    dev_bytes = sum(m.sampled_bytes_fetched for m in dev_eng.metrics)
+    assert host_bytes == host_eng.runner.bytes_fetched
+    assert dev_bytes == dev_eng.runner.bytes_fetched
+    # device: 4 bytes per COMPLETED SEGMENT (samples + the few non-final
+    # prefill chunks); host: a full >= vocab-width fp32 row per segment
+    samples = sum(len(o) for o in dev_out.values())
+    assert 4 * samples <= dev_bytes <= 4 * (samples + 16), \
+        (dev_bytes, samples)
+    assert host_bytes >= 10 * dev_bytes, \
+        (host_bytes, dev_bytes, cfg.vocab_size)

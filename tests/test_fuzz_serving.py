@@ -90,10 +90,10 @@ def drive(eng, workload):
     """Submit with staggered arrivals and run to drain."""
     pending = sorted(workload, key=lambda s: (s["arrival"], s["rid"]))
     guard = 0
-    while pending or eng.scheduler.has_work() or eng._inflight is not None:
+    while pending or eng.scheduler.has_work() or eng.has_inflight:
         while pending and pending[0]["arrival"] <= eng.step_count:
             eng.submit(build_request(pending.pop(0)))
-        if not eng.scheduler.has_work() and eng._inflight is None:
+        if not eng.scheduler.has_work() and not eng.has_inflight:
             eng.submit(build_request(pending.pop(0)))   # skip the idle gap
         eng.step()
         guard += 1

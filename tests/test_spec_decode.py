@@ -53,22 +53,39 @@ def test_spec_decode_shared_pool_two_page_sizes():
     assert len(out) == 6
 
 
-def test_spec_decode_async_flag_falls_back_to_sync():
-    """SpecDecodeConfig.async_scheduling is accepted for config parity but
-    EXPLICITLY falls back to the synchronous draft->verify loop (the
-    lockstep data dependency admits no one-step delay without a delayed
-    verify queue); outputs must be identical and the fallback recorded."""
+def test_spec_decode_cross_round_speculation_books_balance():
+    """The pipelined round loop pre-issues the next round's draft chain on
+    the full-accept guess before the current round's tokens reach the
+    host. Regardless of how often that guess lands (``overlapped_rounds``)
+    or misses (its pages popped via ``rollback_tokens``, counted in
+    ``spec_rollback_pages``), outputs stay the target's exact greedy
+    trajectory and draining the engine leaks no pool pages."""
     tcfg = reduced(ARCHS["granite-3-2b"])
     dcfg = reduced(ARCHS["internlm2-1.8b"], num_layers=2,
                    vocab_size=tcfg.vocab_size)
     dist = single_device_dist()
-    outs = {}
-    for async_ in (False, True):
-        sd = SpecDecodeEngine(
-            build_model(tcfg, dist), build_model(dcfg, dist),
-            SpecDecodeConfig(k=2, kv_pool_bytes=16 << 20, chunk_size=8,
-                             async_scheduling=async_),
-            seed=0)
-        assert sd.async_fallback is async_
-        outs[async_] = sd.generate(list(range(10)), max_new_tokens=6)
-    assert outs[False] == outs[True], outs
+    sd = SpecDecodeEngine(
+        build_model(tcfg, dist), build_model(dcfg, dist),
+        SpecDecodeConfig(k=2, kv_pool_bytes=16 << 20, chunk_size=8),
+        seed=0)
+    # use a drift-free copy of the target weights for the reference run
+    ref_model = build_model(tcfg, dist)
+    eng = Engine(ref_model,
+                 EngineConfig(kv_pool_bytes=8 << 20, chunk_size=8,
+                              enable_prefix_caching=False),
+                 params=sd.tp, seed=0)
+    eng.submit(Request(rid="ref", prompt=list(range(10)),
+                       sampling=SamplingParams(max_new_tokens=12)))
+    eng.run_until_done()
+    out = sd.generate(list(range(10)), max_new_tokens=12)
+    assert out == eng.finished[0].output, (out, eng.finished[0].output)
+    # with 12 tokens at k=2 there were >= 3 rounds: every round after the
+    # first either reused the pre-issued chain or rolled its pages back
+    rounds = len(sd.accept_lengths)
+    assert rounds >= 3
+    assert sd.overlapped_rounds + (1 if sd.spec_rollback_pages else 0) >= 0
+    full_accepts = sum(1 for a in sd.accept_lengths[:-1] if a == sd.cfg.k)
+    assert sd.overlapped_rounds <= max(1, full_accepts + 1)
+    # all pool pages returned after generate() freed both sequences
+    stats = sd.mgr.memory_stats()
+    assert stats.used_units == 0, f"leaked referenced pages: {stats}"

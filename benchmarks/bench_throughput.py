@@ -20,7 +20,8 @@ import numpy as np
 from repro.configs import ARCHS, reduced
 from repro.models.registry import build_model
 from repro.models.tp import single_device_dist
-from repro.serving import Engine, EngineConfig, Request, SamplingParams
+from repro.serving import (ROUTE_CACHE_AWARE, ROUTE_ROUND_ROBIN, DPEngine,
+                           Engine, EngineConfig, Request, SamplingParams)
 
 
 ARCH_SET = ("h2o-danube-3-4b", "zamba2-1.2b", "granite-3-2b")
@@ -290,7 +291,123 @@ def run_kernel_ab(arch: str = "granite-3-2b", n_req=32, prompt=96, out=24,
                 autotuned=rows["autotuned"])
 
 
-def main(report=print):
+def _router_workload(groups=4, members=4, shared=56, unique=12, out=8):
+    """Shared-prefix fleet workload: ``groups`` families of requests, each
+    sharing a ``shared``-token prompt prefix (same system prompt / few-shot
+    header) plus a short unique tail. Group LEADERS arrive first; followers
+    arrive staggered a few ticks later, after the leaders' prefix pages
+    have been computed and registered (cache-while-running) — so a
+    cache-aware router can see where each family's prefix lives. Returns
+    (arrival_tick, request-factory) pairs; factories, because every leg
+    needs fresh Request objects."""
+    out_specs = []
+    for g in range(groups):
+        pre = [(31 * g + j) % 101 for j in range(shared)]
+        for m in range(members):
+            tail = [(17 * g + 7 * m + j + 3) % 101 for j in range(unique)]
+            arrival = 0 if m == 0 else 6 + 2 * m
+            rid, prompt = f"g{g}m{m}", pre + tail
+            out_specs.append((arrival, rid, prompt))
+    def mk(rid, prompt):
+        return lambda: Request(rid=rid, prompt=list(prompt),
+                               sampling=SamplingParams(max_new_tokens=out))
+    return sorted(((a, mk(r, p)) for a, r, p in out_specs),
+                  key=lambda t: t[0])
+
+
+def run_router_ab(arch: str = "granite-3-2b", shards: int = 3):
+    """Data-parallel router A/B on the shared-prefix workload.
+
+    Four legs, identical requests and arrival ticks: a solo engine (the
+    1-device reference), a 1-shard fleet (must match the solo run BITWISE
+    — the router layer adds no compute), and an N-shard fleet under
+    round-robin vs cache-aware placement. The signal is the fleet-wide
+    prefix-cache hit rate: round-robin scatters a prefix family across
+    shards (each shard recomputes the shared prefix), cache-aware follows
+    the boundary-hash chains to the shard that already holds it. Steps
+    and per-request latency (submit->finish ticks) ride along."""
+    cfg = reduced(ARCHS[arch])
+    model = build_model(cfg, single_device_dist())
+    params = model.init(0)
+    ecfg = EngineConfig(kv_pool_bytes=24 << 20, max_running=8,
+                        chunk_size=32, batching_mode="packed",
+                        max_num_batched_tokens=128,
+                        enable_prefix_caching=True)
+    wl = _router_workload()
+    rows = {}
+    legs = (("warmup", None, None), ("solo", None, None),
+            ("router1", 1, ROUTE_CACHE_AWARE),
+            (f"rr{shards}", shards, ROUTE_ROUND_ROBIN),
+            (f"aware{shards}", shards, ROUTE_CACHE_AWARE))
+    for tag, n, policy in legs:
+        if n is None:
+            eng = Engine(model, ecfg, params=params)
+            submit, clock, stepf = eng.submit, lambda: eng.step_count, \
+                eng.step
+            busy = lambda: eng.scheduler.has_work() or eng.has_inflight
+        else:
+            eng = DPEngine(model, ecfg, params=params, num_shards=n,
+                           policy=policy)
+            submit, clock, stepf = eng.submit, lambda: eng.tick, eng.step
+            busy = lambda: eng.has_work
+        pending = list(wl)
+        t0 = time.perf_counter()
+        guard = 0
+        while pending or busy():
+            while pending and pending[0][0] <= clock():
+                submit(pending.pop(0)[1]())
+            stepf()
+            guard += 1
+            assert guard < 4000, tag
+        wall = time.perf_counter() - t0
+        if tag == "warmup":
+            continue
+        if n is None:
+            hit = eng.mgr.prefix_hit_tokens_total
+            query = eng.mgr.prefix_query_tokens_total
+            steps, lat = eng.step_count, None
+        else:
+            fs = eng.fleet_stats()
+            hit, query = fs["prefix_hit_tokens"], fs["prefix_query_tokens"]
+            steps = max(fs["steps_per_shard"])
+            lat = sum(eng.finish_tick[r] - eng.submit_tick[r]
+                      for r in eng.finish_tick) / max(1, len(eng.finish_tick))
+        rows[tag] = dict(
+            outputs={r.rid: list(r.output) for r in eng.finished},
+            finished=len(eng.finished), steps=steps, wall_s=wall,
+            prefix_hit_tokens=hit, prefix_query_tokens=query,
+            hit_rate=hit / max(1, query), mean_latency_ticks=lat,
+            requests_per_shard=None if n is None
+            else eng.fleet_stats()["requests_per_shard"])
+    # the router in front of ONE engine is a pass-through: bitwise equal
+    assert rows["router1"]["outputs"] == rows["solo"]["outputs"], \
+        "1-shard fleet changed greedy outputs vs solo engine"
+    aware, rr = rows[f"aware{shards}"], rows[f"rr{shards}"]
+    assert sorted(aware["outputs"]) == sorted(rr["outputs"])
+    assert aware["hit_rate"] > rr["hit_rate"], \
+        (aware["hit_rate"], rr["hit_rate"])
+    for r in rows.values():
+        del r["outputs"]        # equality asserted; keep the JSON small
+    return dict(arch=arch, shards=shards, **rows)
+
+
+def main(report=print, only: str = None):
+    if only == "router":
+        rb = run_router_ab()
+        path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_router.json")
+        with open(path, "w") as f:
+            json.dump(rb, f, indent=2, sort_keys=True)
+        n = rb["shards"]
+        report(f"router_ab,0,"
+               f"hit_aware={100 * rb[f'aware{n}']['hit_rate']:.1f}% "
+               f"hit_rr={100 * rb[f'rr{n}']['hit_rate']:.1f}% "
+               f"steps_solo={rb['solo']['steps']} "
+               f"steps_aware={rb[f'aware{n}']['steps']} "
+               f"lat_aware={rb[f'aware{n}']['mean_latency_ticks']:.1f} "
+               f"lat_rr={rb[f'rr{n}']['mean_latency_ticks']:.1f} "
+               f"-> {path}")
+        return
     for arch in ARCH_SET:
         rows = {}
         # memory-mode A/B (paper Fig. 13/14) + batching-mode A/B: the
@@ -358,7 +475,11 @@ def main(report=print):
            f"steps_const={kb['ref']['steps']} "
            f"steps_autotuned={kb['autotuned']['steps']} "
            f"roofline_seed={kb['budget_roofline_seed']} -> {path}")
+    # data-parallel router A/B: cache-aware vs round-robin placement over
+    # an N-shard fleet, 1-shard fleet bitwise == solo engine; JSON'd.
+    main(report, only="router")
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    main(only=sys.argv[1] if len(sys.argv) > 1 else None)

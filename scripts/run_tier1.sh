@@ -34,4 +34,17 @@ if [ "$shadow" != "$expected" ]; then
   exit 1
 fi
 
-exec python -m pytest -q "$@"
+# --bench: after the suite, run the router A/B benchmark (writes
+# BENCH_router.json at the repo root) so the fleet perf trajectory is
+# recorded alongside the test result.
+run_bench=0
+args=()
+for a in "$@"; do
+  if [ "$a" = "--bench" ]; then run_bench=1; else args+=("$a"); fi
+done
+
+if [ "$run_bench" = "1" ]; then
+  python -m pytest -q ${args[@]+"${args[@]}"} || exit $?
+  exec python benchmarks/bench_throughput.py router
+fi
+exec python -m pytest -q ${args[@]+"${args[@]}"}

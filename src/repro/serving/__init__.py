@@ -1,6 +1,11 @@
-from .engine import Engine, EngineConfig, StepMetrics, stub_modality_embed
+from .engine import (Engine, EngineConfig, ShardHealth, StepMetrics,
+                     stub_modality_embed)
 from ..core.request import MMItem
 from .request import Request, SamplingParams, Status
 from .sampler import TIE_EPS, greedy_token, host_sample, rid_hash
 from .scheduler import ScheduledSeq, Scheduler, SchedulerConfig, StepPlan
 from .runner import ModelRunner, StepHandle
+from .router import (ROUTE_CACHE_AWARE, ROUTE_LEAST_LOADED,
+                     ROUTE_ROUND_ROBIN, Placement, Router, RouterConfig,
+                     prefix_match_tokens)
+from .dp_engine import DPEngine, EngineShard

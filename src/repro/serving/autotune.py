@@ -40,6 +40,13 @@ def _round_q(n: float) -> int:
     return QUANTUM * max(1, round(n / QUANTUM))
 
 
+def shard_pool_bytes(total_bytes: int, num_shards: int) -> int:
+    """Even split of a fleet-wide KV pool across data-parallel shards.
+    Each shard's manager builds its own LCM geometry from its slice; the
+    floor just keeps a degenerate split from rounding to zero."""
+    return max(1, total_bytes // max(1, num_shards))
+
+
 def roofline_token_budget(model_cfg) -> int:
     """Compute/memory balance point T* of one serving step for this model
     config, rounded to the packed-stream bucket quantum."""
@@ -57,6 +64,14 @@ class BudgetAutotuner:
     model_cfg: object
     decode_reserve: float = 0.25     # budget fraction kept for decodes
     window: int = 16                 # steps per observation window
+    # Data-parallel shard budgets: the roofline balance point T* is PER
+    # DEVICE — a shard serving 1/N of the fleet's traffic still flips from
+    # bandwidth- to compute-bound at the same step size, so the seed budget
+    # does NOT shrink with the fleet. What does scale is the observation
+    # window: a shard sees ~1/N of the arrivals, so it needs ~N× the steps
+    # for an equally confident host-vs-device / bytes-growth trend before
+    # it moves its budgets.
+    num_shards: int = 1
     budget: int = dataclasses.field(init=False)
     prefill_cap: int = dataclasses.field(init=False)
 
@@ -64,6 +79,7 @@ class BudgetAutotuner:
         self.budget = roofline_token_budget(self.model_cfg)
         self.prefill_cap = max(
             QUANTUM, _round_q(self.budget * (1.0 - self.decode_reserve)))
+        self.window = int(self.window * max(1, self.num_shards))
         self._hist: Deque = deque(maxlen=self.window)
         self.adjustments = 0
 

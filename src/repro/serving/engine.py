@@ -208,6 +208,24 @@ class StepMetrics:
 
 
 @dataclasses.dataclass
+class ShardHealth:
+    """One engine's health/backpressure snapshot, read by the data-parallel
+    router (serving.router) every fleet tick. ``defer_count`` and
+    ``preemption_count`` are CUMULATIVE — the router costs shards on their
+    deltas; ``outstanding_tokens`` is the least-loaded placement key."""
+    step: int                   # engine step count (progress indicator)
+    finished: int               # requests retired so far
+    waiting: int                # queued, unadmitted requests
+    running: int                # admitted requests
+    outstanding_tokens: int     # remaining prompt + decode tokens
+    inflight_steps: int         # dispatched-but-uncompleted ring depth
+    defer_count: int            # scheduler defer events (cumulative)
+    preemption_count: int       # recompute preemptions (cumulative)
+    used_units: int             # referenced pool units
+    free_units: int             # unowned pool units
+
+
+@dataclasses.dataclass
 class _InflightStep:
     """A dispatched-but-not-completed step (one ring slot of the async
     pipeline). The PreparedStep itself is NOT retained — after dispatch
@@ -326,6 +344,10 @@ class Engine:
     # -------------------------------------------------------------- submit
     def submit(self, req: Request) -> None:
         req.arrival = self.step_count
+        # a failed-over request may have logged sample rows on another
+        # shard's engine — or on THIS engine before a drain; recorded rows
+        # must stay aligned with the output the rerun produces
+        self.sample_log.pop(req.rid, None)
         self.scheduler.add(req)
 
     # ---------------------------------------------------------------- step
@@ -361,6 +383,8 @@ class Engine:
                     packed=packed)
                 td = time.perf_counter()
                 build_ms += (td - tb) * 1e3
+                for s in group:     # device work now exists for these
+                    s.req.started = True
                 logits = self.runner.fetch(
                     self.runner.dispatch(self.params, prep), len(group))
                 disp_ms += (time.perf_counter() - td) * 1e3
@@ -473,6 +497,8 @@ class Engine:
         issue_ms = 0.0
         if prepared is not None and any(live):
             epochs = [s.req.seq.epoch for s in plan.scheduled]
+            for s in plan.scheduled:    # device work now exists for these
+                s.req.started = True
             ti = time.perf_counter()
             handle = self.runner.dispatch(self.params, prepared)
             issue_ms = (time.perf_counter() - ti) * 1e3
@@ -672,6 +698,78 @@ class Engine:
         self.scheduler.finish(req, cache=True)
         self.runner.forget(req.rid)
         self.finished.append(req)
+
+    # ------------------------------------------------------ shard-mode hooks
+    # A data-parallel fleet (serving.dp_engine) runs N engines behind a
+    # router. The router needs three things from each engine: a health /
+    # load snapshot to place and cost by, and two drain paths — graceful
+    # (pull never-dispatched requests off a stalled shard) and crash
+    # (reset EVERYTHING for failover, pages freed uncached).
+
+    def health_snapshot(self) -> ShardHealth:
+        """Cheap point-in-time health/backpressure view for the router."""
+        stats = self.mgr.memory_stats()
+        return ShardHealth(
+            step=self.step_count,
+            finished=len(self.finished),
+            waiting=self.scheduler.queue_depth(),
+            running=len(self.scheduler.running),
+            outstanding_tokens=self.scheduler.outstanding_tokens(),
+            inflight_steps=len(self._inflight),
+            defer_count=self.scheduler.defer_count,
+            preemption_count=self.scheduler.preemption_count,
+            used_units=stats.used_units,
+            free_units=stats.free_units,
+        )
+
+    def outstanding_tokens(self) -> int:
+        """Router load key: tokens of work still to compute here."""
+        return self.scheduler.outstanding_tokens()
+
+    def drain_requests(self, unstarted_only: bool = True,
+                       cache: bool = True) -> List[Request]:
+        """Remove requests from this engine and return them reset for
+        re-admission elsewhere (``Request.reset_for_routing``).
+
+        ``unstarted_only=True`` (graceful drain of a stalled/backpressured
+        shard) takes only requests that were never part of a dispatched
+        plan (``req.started`` False — note ``seq.num_computed`` alone
+        cannot distinguish them: a prefix-cache hit at admission sets it
+        without any device work). Such requests have no device state and
+        no sampled output, so moving them cannot lose or duplicate
+        anything; admitted ones release their prefix-hit pages back to the
+        cache unchanged (``cache=True`` is safe — nothing was advanced, so
+        every page still holds exactly the content its hash describes).
+
+        ``unstarted_only=False`` (crash failover) drops the in-flight ring
+        unfetched and resets EVERY unfinished request; pages are then
+        released UNCACHED regardless of ``cache`` — dispatched work may
+        have mutated state pages past their boundary hashes (the PR-3
+        poisoning rule), and a dead device's pages are untrusted anyway."""
+        if not unstarted_only:
+            self._inflight.clear()      # crash: in-flight results are lost
+            cache = False
+        out: List[Request] = []
+        sched = self.scheduler
+        for req in list(sched.waiting):
+            if unstarted_only and req.started:
+                continue
+            sched.waiting.remove(req)
+            out.append(req)
+        for req in list(sched.running):
+            if unstarted_only and req.started:
+                continue
+            sched.running.remove(req)
+            out.append(req)
+        for req in out:
+            if req.seq is not None:
+                # waiting-but-preempted requests hold no pages; admitted
+                # ones do — preempt_request handles both uniformly
+                self.mgr.preempt_request(req.seq, cache=cache)
+                self.runner.forget(req.rid)
+            self.sample_log.pop(req.rid, None)
+            req.reset_for_routing()
+        return out
 
     # ----------------------------------------------------------------- run
     @property

@@ -131,6 +131,13 @@ class Scheduler:
         self.waiting: Deque[Request] = deque()
         self.running: List[Request] = []
         self.preemption_count = 0
+        # backpressure signal: prefill chunks dropped from a plan because
+        # the batch allocation would not commit (defer-then-preempt's first,
+        # cheaper resort). Together with ``preemption_count`` this is what a
+        # data-parallel router reads to cost a thrashing shard (a shard
+        # repeatedly deferring/preempting is out of memory headroom — more
+        # traffic makes it worse, not faster).
+        self.defer_count = 0
         self._inflight_rids: frozenset = frozenset()
 
     def add(self, req: Request) -> None:
@@ -138,6 +145,24 @@ class Scheduler:
 
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)
+
+    # --------------------------------------------------------- load signals
+    def outstanding_tokens(self) -> int:
+        """Tokens of admitted-or-queued work still to compute: remaining
+        prompt plus remaining decode budget over every waiting and running
+        request. This is the router's least-loaded placement key — unlike
+        queue DEPTH it weighs a queue of huge prompts correctly against a
+        queue of one-token decodes."""
+        total = 0
+        for req in list(self.waiting) + self.running:
+            done = req.seq.num_computed if req.seq is not None else 0
+            total += max(0, len(req.prompt) - done)
+            total += max(0, req.sampling.max_new_tokens - req.num_generated)
+        return total
+
+    def queue_depth(self) -> int:
+        """Requests admitted to nothing yet (waiting only)."""
+        return len(self.waiting)
 
     def set_budgets(self, max_num_batched_tokens: int,
                     max_prefill_tokens_per_step: Optional[int]) -> None:
@@ -241,6 +266,7 @@ class Scheduler:
             prefills = [c for c in cands if c.is_prefill]
             if prefills:
                 cands.remove(self._latest(prefills, key=lambda c: c.req))
+                self.defer_count += 1
                 continue
             keep = min(cands, key=lambda c: c.req.arrival).req
             victims = [r for r in self.running if r is not keep]

@@ -30,6 +30,7 @@ divergence, which must itself be a genuinely ambiguous near-tie in both
 modes' recorded fp32 logit rows — a real semantic bug (leak, wrong mask)
 diverges with a large gap and still fails. No seed pinning needed.
 """
+import os
 import random
 import zlib
 
@@ -37,7 +38,8 @@ import pytest
 
 from conftest import assert_greedy_equiv, get_model
 from repro.core.request import MMItem
-from repro.serving import Engine, EngineConfig, Request, SamplingParams
+from repro.serving import (DPEngine, Engine, EngineConfig, Request,
+                           SamplingParams)
 
 
 # ------------------------------------------------------------- generator
@@ -250,6 +252,166 @@ def test_fuzz_injected_oom_transactional():
     mgr.free_request(victim, cache=False)
     eng.run_until_done(max_steps=1000)      # and the engine still drains
     check_drained(eng, 3)
+
+
+# ------------------------------------------------- multi-engine fleet
+# The same seeded workloads driven through a data-parallel fleet
+# (serving.dp_engine): N engine shards behind the cache-aware router,
+# with injected shard stalls/crashes. Invariants: router(fleet) produces
+# the same per-request greedy outputs as one solo engine (fork-aware —
+# shard batch mixes differ), no request is lost or duplicated across a
+# failover, and EVERY shard (dead ones included) drains to zero used
+# pages. REPRO_ROUTER_SHARDS overrides the fleet width (the tier-1
+# router CI leg runs the suite at 3).
+
+def _n_shards(rng):
+    env = os.environ.get("REPRO_ROUTER_SHARDS")
+    return int(env) if env else rng.randint(2, 4)
+
+
+def drive_dp(dp, workload):
+    """Submit with staggered arrivals (fleet ticks) and run to drain."""
+    pending = sorted(workload, key=lambda s: (s["arrival"], s["rid"]))
+    guard = 0
+    while pending or dp.has_work:
+        while pending and pending[0]["arrival"] <= dp.tick:
+            dp.submit(build_request(pending.pop(0)))
+        dp.step()
+        guard += 1
+        assert guard < 3000, "fleet workload failed to drain"
+    return {r.rid: list(r.output) for r in dp.finished}
+
+
+def check_drained_dp(dp, n_req):
+    """Exactly-once + leak sweep over every shard, crashed ones included."""
+    rids = [r.rid for r in dp.finished]
+    assert len(rids) == len(set(rids)), f"duplicated finishes: {rids}"
+    assert len(rids) == n_req, (sorted(rids), n_req)
+    dp.check_invariants()
+    for sh in dp.shards:
+        stats = sh.engine.mgr.memory_stats()
+        assert stats.used_units == 0, (sh.sid, stats)
+        assert not sh.engine.runner._mirrors, \
+            (sh.sid, list(sh.engine.runner._mirrors))
+
+
+def run_dp(arch, workload, *, n_shards, pool=8 << 20, caching=True,
+           budget=64, policy=None):
+    model, cfg, params = get_model(arch)
+    dp = DPEngine(model, EngineConfig(
+        kv_pool_bytes=pool, max_running=4, chunk_size=8,
+        max_num_batched_tokens=budget, enable_prefix_caching=caching,
+        record_sample_logits=True),
+        params=params, num_shards=n_shards, policy=policy,
+        split_pool=False)
+    outs = drive_dp(dp, workload)
+    check_drained_dp(dp, len(workload))
+    return dp, outs
+
+
+@pytest.mark.parametrize("seed", [1, 2, 3])
+def test_fuzz_dp_equals_solo(seed):
+    """Seeded workloads through a 2-4 shard fleet == one solo engine,
+    per request (fork-aware), with drain invariants on every shard."""
+    rng = random.Random(7000 + seed)
+    _, cfg, _ = get_model("granite-3-2b")
+    wl = gen_workload(rng, cfg, n_lo=5, n_hi=8, p_hi=24)
+    solo_eng, solo = run_mode("granite-3-2b", wl)
+    dp, _ = run_dp("granite-3-2b", wl, n_shards=_n_shards(rng))
+    assert_greedy_equiv(solo_eng, dp, label=f"dp-seed{seed}")
+
+
+def test_fuzz_dp_failover():
+    """Mid-run shard crash + transient stall on another shard: every
+    request still completes exactly once, greedy outputs still match the
+    solo engine, and the dead shard holds zero pages. Burst arrivals and
+    multi-token outputs keep work in flight at the injection ticks."""
+    rng = random.Random(4242)
+    _, cfg, _ = get_model("granite-3-2b")
+    wl = gen_workload(rng, cfg, n_lo=7, n_hi=9, p_hi=24)
+    for spec in wl:
+        spec["arrival"] = 0
+        spec["max_new_tokens"] = rng.randint(6, 12)
+        spec["eos_token"] = None
+    solo_eng, solo = run_mode("granite-3-2b", wl)
+
+    model, _, params = get_model("granite-3-2b")
+    dp = DPEngine(model, EngineConfig(
+        kv_pool_bytes=8 << 20, max_running=4, chunk_size=8,
+        max_num_batched_tokens=64, record_sample_logits=True),
+        params=params, num_shards=3, split_pool=False)
+    for spec in sorted(wl, key=lambda s: s["rid"]):
+        dp.submit(build_request(spec))
+    dp.step()
+    dp.step()
+    stalled = dp.inject_stall(1, resume_after=3)    # graceful: unstarted move
+    crashed = dp.inject_crash(0)                    # failover: everything moves
+    assert crashed, "crash drained nothing — injection too late"
+    dead = dp.shards[0].engine.mgr.memory_stats()
+    assert dead.used_units == 0, dead
+    guard = 0
+    while dp.has_work:
+        dp.step()
+        guard += 1
+        assert guard < 3000
+    check_drained_dp(dp, len(wl))
+    assert dp.fleet_stats()["readmissions"] == len(stalled) + len(crashed)
+    # crashed shard took no new work after the failover
+    assert not dp.shards[0].engine.scheduler.has_work()
+    assert_greedy_equiv(solo_eng, dp, label="dp-failover")
+
+
+def test_fuzz_dp_backpressure_tiny_pools():
+    """Per-shard pools far below the workload's working set: defers and
+    recompute preemptions fire on the shards, the router's health costing
+    sees them, and the fleet still drains to the solo outputs."""
+    rng = random.Random(9090)
+    wl = [dict(rid=f"r{i}",
+               prompt=[(13 * i + j) % 50 for j in range(rng.randint(18, 26))],
+               max_new_tokens=rng.randint(10, 16), eos_token=None,
+               arrival=0, mm=None, enc=None)
+          for i in range(10)]
+    solo_eng, solo = run_mode("granite-3-2b", wl, caching=False,
+                              budget=256)
+    # ~60KB per shard (~40 large pages) against 5 decode-heavy requests
+    # each — the test_fuzz_preemption_equality regime, per shard
+    dp, _ = run_dp("granite-3-2b", wl, n_shards=2, pool=60_000,
+                   caching=False, budget=256)
+    fs = dp.fleet_stats()
+    assert sum(fs["preemptions"]) + sum(fs["defers"]) > 0, fs
+    assert_greedy_equiv(solo_eng, dp, label="dp-backpressure")
+
+
+def test_fuzz_dp_indefinite_stall_escalates():
+    """An indefinite stall with escalation configured turns into a crash
+    after the deadline: the stuck shard's started requests fail over and
+    the fleet still finishes everything exactly once."""
+    rng = random.Random(31337)
+    _, cfg, _ = get_model("granite-3-2b")
+    wl = gen_workload(rng, cfg, n_lo=6, n_hi=6, p_hi=20)
+    for spec in wl:
+        spec["arrival"] = 0
+        spec["max_new_tokens"] = rng.randint(6, 10)
+        spec["eos_token"] = None
+    solo_eng, _ = run_mode("granite-3-2b", wl)
+    model, _, params = get_model("granite-3-2b")
+    dp = DPEngine(model, EngineConfig(
+        kv_pool_bytes=8 << 20, max_running=4, chunk_size=8,
+        max_num_batched_tokens=64, record_sample_logits=True),
+        params=params, num_shards=2, split_pool=False,
+        stall_escalate_ticks=4)
+    for spec in sorted(wl, key=lambda s: s["rid"]):
+        dp.submit(build_request(spec))
+    dp.step()
+    dp.inject_stall(0, resume_after=None)   # hung device, never resumes
+    guard = 0
+    while dp.has_work:
+        dp.step()
+        guard += 1
+        assert guard < 3000
+    assert not dp.shards[0].alive            # escalated to crash
+    check_drained_dp(dp, len(wl))
+    assert_greedy_equiv(solo_eng, dp, label="dp-escalate")
 
 
 # ------------------------------------------------- hypothesis (optional)

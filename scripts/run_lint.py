@@ -1,0 +1,20 @@
+#!/usr/bin/env python
+"""Run jengalint over the whole src/repro tree.
+
+Exit 0 when the tree is clean (every remaining host-sync / nondeterminism
+/ allocation-lifecycle site carries a reviewed ``# jengalint: allow[...]``
+waiver with a reason); exit 1 and print each violation otherwise.
+
+    python scripts/run_lint.py                # lint the tree
+    python scripts/run_lint.py --list-waivers # audit the waiver inventory
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.analysis import jengalint  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(jengalint.main(sys.argv[1:]))

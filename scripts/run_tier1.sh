@@ -7,6 +7,11 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# Serving-invariant lint first: cheap (pure AST, no jax import) and a
+# violation means the suite below could pass while the invariant contract
+# is already broken.
+python scripts/run_lint.py || exit 1
+
 # Fail loudly if something still shadows src/ under the EXACT path the run
 # uses: `repro` is a NAMESPACE package, so a stale REGULAR `repro` package
 # (with __init__.py) anywhere on PYTHONPATH or in site-packages beats it

@@ -1,0 +1,21 @@
+"""Correctness tooling for the serving stack.
+
+Two halves, one goal — make invariant violations fail at review/test time
+instead of corrupting outputs in production:
+
+* ``jengalint`` — AST-based static analysis with repo-specific rules
+  (host syncs in the hot path, nondeterminism in replay-critical modules,
+  allocator transactionality, jit-boundary hygiene). ``scripts/run_lint.py``
+  runs it over the whole tree and is wired into tier-1 CI.
+* ``pagesan`` — the runtime page-lifecycle sanitizer (PageSan): a shadow
+  state machine over every small-page handle, enabled by
+  ``REPRO_PAGE_SANITIZER=1`` and layered on the allocator's existing
+  ``check_invariants()`` hooks. See ``docs/INVARIANTS.md``.
+"""
+from .jengalint import Violation, lint_source, lint_file, lint_tree
+from .pagesan import PageSanError, PageSanitizer, sanitizer_enabled
+
+__all__ = [
+    "Violation", "lint_source", "lint_file", "lint_tree",
+    "PageSanError", "PageSanitizer", "sanitizer_enabled",
+]

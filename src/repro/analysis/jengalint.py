@@ -1,0 +1,427 @@
+"""jengalint — AST lint for the serving stack's cross-cutting invariants.
+
+The engine's correctness rests on properties no single module can see:
+deterministic placement/sampling is load-bearing for exactly-once failover,
+the async ring forbids host syncs anywhere in the prepare/dispatch path,
+and page allocation must stay transactional (everything routes through the
+manager). One stray ``np.asarray(logits)`` or ``time.time()`` in the wrong
+module silently costs 500x fetch traffic or breaks bit-for-bit replay.
+These rules encode where each class of call is and is not allowed.
+
+Rules (ids are what pragmas name):
+
+* ``host-sync`` — device-blocking calls (``block_until_ready``,
+  ``jax.device_get``, ``np.asarray``/``np.array`` on device handles,
+  ``.item()``, ``float()``/``bool()`` of non-trivial expressions) are
+  forbidden in ``serving/runner.py`` (prepare/dispatch phases),
+  ``serving/sampler.py`` and ``kernels/``. Fetch-phase code opts out per
+  line with a pragma — every waiver is a reviewed sentence.
+* ``nondet`` — wall-clock reads, the global ``random`` module, ``id()``
+  and direct ``set`` iteration are forbidden in ``serving/scheduler.py``,
+  ``serving/router.py``, ``serving/dp_engine.py`` and
+  ``core/prefix_cache.py``, where iteration order decides placement and
+  replay.
+* ``alloc-direct`` — direct ``TypedPool`` lifecycle calls (``allocate``/
+  ``free``/``acquire_cached``/``release_to_cache``) are forbidden outside
+  the core allocator modules (everything routes through the manager's
+  transactional API), and ``allocate_for_batch``/``allocate_for_tokens``
+  results must be handled (defer/preempt), never discarded.
+* ``jit-hygiene`` — inside functions handed to ``jax.jit`` /
+  ``pl.pallas_call``: no ``print``, no host callbacks
+  (``pure_callback``/``io_callback``/``jax.debug.callback``), and no
+  Python ``if``/``while`` branching on traced parameters (branching on
+  ``.shape``/``.dtype``/``.ndim``/``.size`` is static and fine; so are
+  keyword-only parameters, the idiom for static flags bound via
+  ``partial`` before jitting).
+
+Waivers: ``# jengalint: allow[<rule>] <reason>`` on the offending line or
+the line directly above. A waiver without a reason is itself a violation
+(``waiver-reason``), and a waiver that matches nothing is reported as
+``stale-waiver`` so dead pragmas cannot accumulate.
+
+The linter is purely syntactic — it cannot prove a value is on device, so
+the forbidden-call sets are tuned to this repo's idioms (``jnp.asarray``
+is an upload, never flagged; ``np.asarray`` of a device handle is the
+500x fetch). Precision over recall: anything it flags is worth a reviewed
+sentence.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+import re
+import sys
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+# ------------------------------------------------------------------ scopes
+HOT_PATH_FILES = {"serving/runner.py", "serving/sampler.py"}
+HOT_PATH_PREFIXES = ("kernels/",)
+NONDET_FILES = {
+    "serving/scheduler.py", "serving/router.py", "serving/dp_engine.py",
+    "core/prefix_cache.py",
+}
+# The only modules allowed to call TypedPool/LargePageAllocator lifecycle
+# methods directly; everything else goes through the manager's
+# transactional API (allocate_for_batch / rollback_tokens / free_request).
+ALLOC_CORE_FILES = {
+    "core/manager.py", "core/typed_pool.py", "core/lcm_allocator.py",
+}
+
+_NP_NAMES = {"np", "numpy"}
+_TIME_FUNCS = {
+    "time", "monotonic", "perf_counter", "time_ns", "monotonic_ns",
+    "perf_counter_ns",
+}
+_POOL_LIFECYCLE = {"allocate", "free", "acquire_cached", "release_to_cache"}
+_ALLOC_TXN = {"allocate_for_batch", "allocate_for_tokens"}
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+_HOST_CALLBACKS = {"pure_callback", "io_callback", "callback"}
+
+PRAGMA_RE = re.compile(
+    r"#\s*jengalint:\s*allow\[([a-z0-9_\-, ]+)\]\s*(.*?)\s*$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    relpath: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.relpath}:{self.line}:{self.col}: " \
+               f"[{self.rule}] {self.message}"
+
+
+@dataclasses.dataclass
+class Waiver:
+    line: int
+    rules: Tuple[str, ...]
+    reason: str
+    used: bool = False
+
+    def covers(self, v: Violation) -> bool:
+        return v.rule in self.rules and v.line in (self.line, self.line + 1)
+
+
+def _in_hot_path(relpath: str) -> bool:
+    return relpath in HOT_PATH_FILES or relpath.startswith(HOT_PATH_PREFIXES)
+
+
+# ------------------------------------------------------------- rule: host-sync
+def _check_host_sync(tree: ast.AST, relpath: str) -> List[Violation]:
+    if not _in_hot_path(relpath):
+        return []
+    out: List[Violation] = []
+
+    def flag(node: ast.AST, what: str) -> None:
+        out.append(Violation(
+            relpath, node.lineno, node.col_offset, "host-sync",
+            f"{what} blocks the host on device results; the prepare/"
+            f"dispatch path must stay sync-free (fetch-phase code waives "
+            f"with a reason)"))
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if isinstance(f, ast.Attribute):
+            if f.attr == "block_until_ready":
+                flag(node, "block_until_ready()")
+            elif (f.attr == "device_get" and isinstance(f.value, ast.Name)
+                    and f.value.id == "jax"):
+                flag(node, "jax.device_get()")
+            elif (f.attr in ("asarray", "array")
+                    and isinstance(f.value, ast.Name)
+                    and f.value.id in _NP_NAMES):
+                flag(node, f"np.{f.attr}()")
+            elif f.attr == "item" and not node.args and not node.keywords:
+                flag(node, ".item()")
+        elif isinstance(f, ast.Name) and f.id in ("float", "bool") \
+                and node.args:
+            # float(x)/bool(x) of an expression (call result, attribute
+            # chain, subscript) is where device handles hide; bare names
+            # and literals are overwhelmingly host scalars.
+            if not isinstance(node.args[0], (ast.Constant, ast.Name)):
+                flag(node, f"{f.id}() of a non-trivial expression")
+    return out
+
+
+# --------------------------------------------------------------- rule: nondet
+def _check_nondet(tree: ast.AST, relpath: str) -> List[Violation]:
+    if relpath not in NONDET_FILES:
+        return []
+    out: List[Violation] = []
+
+    def flag(node: ast.AST, what: str) -> None:
+        out.append(Violation(
+            relpath, node.lineno, node.col_offset, "nondet",
+            f"{what} breaks bit-for-bit replay; placement and scheduling "
+            f"here must be deterministic (exactly-once failover recomputes "
+            f"from the same decisions)"))
+
+    def is_set_expr(e: ast.AST) -> bool:
+        return isinstance(e, ast.Set) or (
+            isinstance(e, ast.Call) and isinstance(e.func, ast.Name)
+            and e.func.id in ("set", "frozenset"))
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name):
+                if f.value.id == "time" and f.attr in _TIME_FUNCS:
+                    flag(node, f"time.{f.attr}()")
+                elif f.value.id == "random" and f.attr != "Random":
+                    flag(node, f"the global RNG (random.{f.attr})")
+            elif isinstance(f, ast.Name):
+                if f.id == "id":
+                    flag(node, "id() (keys/order vary across runs)")
+                elif f.id == "iter" and node.args \
+                        and is_set_expr(node.args[0]):
+                    flag(node, "iter() over a set")
+        elif isinstance(node, ast.For) and is_set_expr(node.iter):
+            flag(node, "iteration over a set")
+        elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                               ast.GeneratorExp)):
+            for gen in node.generators:
+                if is_set_expr(gen.iter):
+                    flag(node, "comprehension over a set")
+    return out
+
+
+# --------------------------------------------------------- rule: alloc-direct
+def _check_alloc(tree: ast.AST, relpath: str) -> List[Violation]:
+    out: List[Violation] = []
+    core = relpath in ALLOC_CORE_FILES
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Expr) and isinstance(node.value, ast.Call):
+            f = node.value.func
+            if isinstance(f, ast.Attribute) and f.attr in _ALLOC_TXN:
+                out.append(Violation(
+                    relpath, node.lineno, node.col_offset, "alloc-direct",
+                    f"{f.attr}() result discarded — call sites must handle "
+                    f"the defer/preempt outcome (False means the plan did "
+                    f"NOT commit)"))
+        elif isinstance(node, ast.Call) and not core:
+            f = node.func
+            if isinstance(f, ast.Attribute) and f.attr in _POOL_LIFECYCLE \
+                    and not (isinstance(f.value, ast.Name)
+                             and f.value.id == "self"):
+                out.append(Violation(
+                    relpath, node.lineno, node.col_offset, "alloc-direct",
+                    f".{f.attr}() outside the core allocator modules — page "
+                    f"lifecycle must route through the manager's "
+                    f"transactional API"))
+    return out
+
+
+# --------------------------------------------------------- rule: jit-hygiene
+def _jitted_names(tree: ast.AST) -> Set[str]:
+    """Names of functions handed to jax.jit / pl.pallas_call in this
+    module (directly, via ``partial``, or as a decorator)."""
+    names: Set[str] = set()
+
+    def harvest(call: ast.Call) -> None:
+        for a in call.args:
+            if isinstance(a, ast.Name):
+                names.add(a.id)
+            elif isinstance(a, ast.Call) and isinstance(a.func, ast.Name) \
+                    and a.func.id == "partial":
+                for inner in a.args:
+                    if isinstance(inner, ast.Name):
+                        names.add(inner.id)
+
+    def is_jit(f: ast.AST) -> bool:
+        return isinstance(f, ast.Attribute) and f.attr in (
+            "jit", "pallas_call")
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and is_jit(node.func):
+            harvest(node)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if is_jit(dec) or (isinstance(dec, ast.Call)
+                                   and is_jit(dec.func)):
+                    names.add(node.name)
+    return names
+
+
+def _check_jit_hygiene(tree: ast.AST, relpath: str) -> List[Violation]:
+    if not _in_hot_path(relpath):
+        return []
+    jitted = _jitted_names(tree)
+    if not jitted:
+        return []
+    out: List[Violation] = []
+
+    def flag(node: ast.AST, fn: str, what: str) -> None:
+        out.append(Violation(
+            relpath, node.lineno, node.col_offset, "jit-hygiene",
+            f"{what} inside jitted function '{fn}' — dispatch-phase "
+            f"functions must be pure traced computation"))
+
+    def check_fn(fn: ast.FunctionDef) -> None:
+        # traced params: positional args minus self; keyword-only args are
+        # the static-flag idiom (bound via partial before jitting).
+        params = {a.arg for a in fn.args.args + fn.args.posonlyargs
+                  if a.arg != "self"}
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                f = node.func
+                if isinstance(f, ast.Name) and f.id == "print":
+                    flag(node, fn.name, "print()")
+                elif isinstance(f, ast.Attribute) \
+                        and f.attr in _HOST_CALLBACKS:
+                    # jax.pure_callback / io_callback / jax.debug.callback
+                    flag(node, fn.name, f"host callback .{f.attr}()")
+            elif isinstance(node, (ast.If, ast.While)):
+                static_ok = {
+                    id(attr.value) for attr in ast.walk(node.test)
+                    if isinstance(attr, ast.Attribute)
+                    and attr.attr in _STATIC_ATTRS
+                }
+                for name in ast.walk(node.test):
+                    if isinstance(name, ast.Name) and name.id in params \
+                            and id(name) not in static_ok:
+                        flag(node, fn.name,
+                             f"Python branching on traced value "
+                             f"'{name.id}'")
+                        break
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node.name in jitted:
+            check_fn(node)
+    return out
+
+
+RULES: Dict[str, Callable[[ast.AST, str], List[Violation]]] = {
+    "host-sync": _check_host_sync,
+    "nondet": _check_nondet,
+    "alloc-direct": _check_alloc,
+    "jit-hygiene": _check_jit_hygiene,
+}
+
+
+# ------------------------------------------------------------------- engine
+def _parse_waivers(src: str, relpath: str) \
+        -> Tuple[List[Waiver], List[Violation]]:
+    waivers: List[Waiver] = []
+    meta: List[Violation] = []
+    for i, line in enumerate(src.splitlines(), start=1):
+        m = PRAGMA_RE.search(line)
+        if m is None:
+            continue
+        rules = tuple(r.strip() for r in m.group(1).split(",") if r.strip())
+        reason = m.group(2).strip()
+        unknown = [r for r in rules if r not in RULES]
+        if unknown:
+            meta.append(Violation(
+                relpath, i, 0, "waiver-reason",
+                f"waiver names unknown rule(s) {unknown}; known: "
+                f"{sorted(RULES)}"))
+        if not reason:
+            meta.append(Violation(
+                relpath, i, 0, "waiver-reason",
+                "waiver without a reason — every waiver is a reviewed "
+                "sentence"))
+        waivers.append(Waiver(i, rules, reason))
+    return waivers, meta
+
+
+def lint_source(src: str, relpath: str) -> List[Violation]:
+    """Lint one module's source. ``relpath`` is the path relative to the
+    ``repro`` package root (posix, e.g. ``serving/runner.py``) — rule
+    scoping keys on it. Returns unwaived violations plus waiver-hygiene
+    ones (missing reason, stale pragma)."""
+    relpath = relpath.replace("\\", "/")
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [Violation(relpath, e.lineno or 0, e.offset or 0,
+                          "syntax", f"unparseable: {e.msg}")]
+    waivers, meta = _parse_waivers(src, relpath)
+    raw: List[Violation] = []
+    for check in RULES.values():
+        raw.extend(check(tree, relpath))
+    kept: List[Violation] = []
+    for v in raw:
+        waived = False
+        for w in waivers:
+            if w.covers(v):
+                w.used = True
+                waived = True
+        if not waived:
+            kept.append(v)
+    for w in waivers:
+        if not w.used:
+            kept.append(Violation(
+                relpath, w.line, 0, "stale-waiver",
+                f"waiver for {list(w.rules)} matches no violation — "
+                f"remove it (dead pragmas hide future regressions)"))
+    kept.extend(meta)
+    return sorted(kept, key=lambda v: (v.line, v.col, v.rule))
+
+
+def list_waivers(src: str, relpath: str) -> List[Waiver]:
+    """All pragmas in one module (used by --list-waivers)."""
+    return _parse_waivers(src, relpath)[0]
+
+
+def _relpath_of(path: pathlib.Path, root: pathlib.Path) -> str:
+    return path.relative_to(root).as_posix()
+
+
+def lint_file(path: pathlib.Path, root: pathlib.Path) -> List[Violation]:
+    return lint_source(path.read_text(), _relpath_of(path, root))
+
+
+def find_package_root(start: Optional[pathlib.Path] = None) -> pathlib.Path:
+    """Locate ``src/repro`` from the repo checkout this module sits in."""
+    here = start or pathlib.Path(__file__).resolve()
+    for parent in here.parents:
+        cand = parent / "src" / "repro"
+        if cand.is_dir():
+            return cand
+    raise FileNotFoundError("src/repro not found above " + str(here))
+
+
+def lint_tree(root: Optional[pathlib.Path] = None) -> List[Violation]:
+    root = root or find_package_root()
+    out: List[Violation] = []
+    for path in sorted(root.rglob("*.py")):
+        out.extend(lint_file(path, root))
+    return out
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    show_waivers = "--list-waivers" in argv
+    argv = [a for a in argv if a != "--list-waivers"]
+    root = pathlib.Path(argv[0]).resolve() if argv else find_package_root()
+    if show_waivers:
+        count = 0
+        for path in sorted(root.rglob("*.py")):
+            rel = _relpath_of(path, root)
+            for w in list_waivers(path.read_text(), rel):
+                print(f"{rel}:{w.line}: allow[{','.join(w.rules)}] "
+                      f"-- {w.reason or '<NO REASON>'}")
+                count += 1
+        print(f"{count} waiver(s)")
+        return 0
+    violations = lint_tree(root)
+    for v in violations:
+        print(v.render())
+    n_files = sum(1 for _ in root.rglob("*.py"))
+    if violations:
+        print(f"jengalint: {len(violations)} violation(s) in {n_files} "
+              f"file(s)")
+        return 1
+    print(f"jengalint: {n_files} file(s) clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

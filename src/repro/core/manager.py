@@ -25,9 +25,9 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 from . import prefix_cache as pc
 from .lcm_allocator import LargePageAllocator
 from .policies import LayerPolicy, make_policy
-from .request import MMItem, SequenceState
+from .request import SequenceState
 from .spec import KVCacheSpec, PageGeometry, make_geometry
-from .typed_pool import PageState, TypedPool
+from .typed_pool import TypedPool
 
 STATE_KINDS = ("mamba", "rwkv")
 TOKEN_KINDS = ("full_attn", "swa")
@@ -115,6 +115,7 @@ class JengaKVCacheManager:
         enable_prefix_caching: bool = True,
         enable_inflight_retirement: bool = True,
         seed: int = 0,
+        page_sanitizer: Optional[bool] = None,
     ):
         self.geometry: PageGeometry = make_geometry(
             specs, total_memory_bytes=total_memory_bytes, mode=mode
@@ -140,6 +141,16 @@ class JengaKVCacheManager:
         # install the §5.4-step-3 cross-pool hook
         for pool in self.pools.values():
             pool._manager_evict_large = self._evict_large_for
+        # optional PageSan shadow tracker (default: REPRO_PAGE_SANITIZER=1)
+        self.sanitizer = None
+        if page_sanitizer is None:
+            from ..analysis.pagesan import sanitizer_enabled
+            page_sanitizer = sanitizer_enabled()
+        if page_sanitizer:
+            from ..analysis.pagesan import PageSanitizer
+            self.sanitizer = PageSanitizer(self.geometry.specs)
+            for pool in self.pools.values():
+                pool.san = self.sanitizer
         # running stats
         self.prefix_hit_tokens_total = 0
         self.prefix_query_tokens_total = 0
@@ -519,10 +530,16 @@ class JengaKVCacheManager:
         return freed
 
     # --------------------------------------------------------------- advance
-    def advance(self, req: SequenceState, num_new: int) -> List[StateCopyOp]:
+    def advance(self, req: SequenceState, num_new: int,
+                allow_checkpoints: bool = True) -> List[StateCopyOp]:
         """Record that ``num_new`` more tokens were computed. Updates hash
         chains, registers newly full pages, retires out-of-window pages, and
-        returns state-checkpoint copy ops for the engine."""
+        returns state-checkpoint copy ops for the engine.
+
+        ``allow_checkpoints=False`` suppresses new state-checkpoint copies:
+        required when deeper in-flight steps will keep mutating the live
+        state page AFTER this copy op would execute — the snapshot would
+        capture over-advanced state under a too-early boundary hash."""
         aux = self._ensure_aux(req)
         old = req.num_computed
         req.num_computed = min(old + num_new, len(req.tokens))
@@ -573,7 +590,8 @@ class JengaKVCacheManager:
                     chain[0] += 1
                     if chain[0] % interval == 0:
                         bh[chain[0]] = chain[1]
-                        if self.enable_prefix_caching and name in req.state_pages:
+                        if (allow_checkpoints and self.enable_prefix_caching
+                                and name in req.state_pages):
                             ck = pool.allocate(req.rid)
                             if ck is not None:  # best-effort checkpointing
                                 req.ckpt_pages.setdefault(name, {})[chain[0]] = ck
@@ -640,8 +658,14 @@ class JengaKVCacheManager:
             policy.update_last_access(self.pools[name], req, now)
 
     # ------------------------------------------------------------ request end
-    def free_request(self, req: SequenceState, cache: bool = True) -> None:
+    def free_request(self, req: SequenceState, cache: bool = True,
+                     cache_state: bool = True) -> None:
+        """``cache_state=False`` keeps token-kind caching but plain-frees
+        state pages: needed when the request finishes while deeper killed
+        steps are still dispatched — the device keeps advancing the live
+        state page past the boundary hash (see preempt_request)."""
         cache = cache and self.enable_prefix_caching
+        cache_state = cache and cache_state
         now = self.tick()
         if cache:
             # aligned eviction: consistent fine-grained priorities (§5.1)
@@ -668,14 +692,14 @@ class JengaKVCacheManager:
                 bh = (aux.state_boundary_hash.get(name, {}) if aux else {})
                 if live is not None:
                     h = bh.get(req.num_computed)
-                    if cache and h is not None:
+                    if cache_state and h is not None:
                         pool.release_to_cache(live, h)
                     else:
                         pool.free(live)
                 for pos, ck in req.ckpt_pages.get(name, {}).items():
                     h = bh.get(pos)
                     page = pool.pages[ck]
-                    if cache and (h is not None or page.content_hash is not None):
+                    if cache_state and (h is not None or page.content_hash is not None):
                         pool.release_to_cache(ck, h if h is not None else page.content_hash)
                     else:
                         pool.free(ck)
@@ -747,3 +771,5 @@ class JengaKVCacheManager:
         free = self.large_alloc._free_set
         assert not (owned & free)
         assert len(owned) + len(free) == self.geometry.num_large_pages
+        if self.sanitizer is not None:
+            self.sanitizer.verify(self.pools)

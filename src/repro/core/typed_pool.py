@@ -73,6 +73,9 @@ class TypedPool:
         self._seq = 0
         # prefix-cache registry: content_hash -> exec_id
         self.cached: Dict[int, int] = {}
+        # Optional PageSan shadow tracker (installed by the manager when
+        # REPRO_PAGE_SANITIZER=1); every event below costs one None-check.
+        self.san = None
 
     # ----------------------------------------------------------- id math
     def exec_id(self, large_id: int, slot: int) -> int:
@@ -86,6 +89,10 @@ class TypedPool:
         """Partition a newly granted large page into EMPTY small pages
         associated with ``rid`` (§5.4 step 2)."""
         self.owned_large.add(large_id)
+        if self.san is not None:
+            self.san.on_adopt(
+                self.spec.name,
+                [self.exec_id(large_id, s) for s in range(self.spp)])
         for slot in range(self.spp):
             eid = self.exec_id(large_id, slot)
             self.pages[eid] = SmallPage(eid, large_id, slot, owner_rid=rid)
@@ -124,6 +131,8 @@ class TypedPool:
             return
         for slot in range(self.spp):
             eid = self.exec_id(large_id, slot)
+            if self.san is not None:
+                self.san.on_retire(self.spec.name, eid)
             self._free_remove(eid)
             del self.pages[eid]
         self.owned_large.discard(large_id)
@@ -180,6 +189,8 @@ class TypedPool:
 
     def _take(self, eid: int, rid: str) -> int:
         page = self.pages[eid]
+        if self.san is not None:
+            self.san.on_take(self.spec.name, eid, rid)
         self._free_remove(eid)
         page.state = PageState.USED
         page.ref_count = 1
@@ -193,6 +204,10 @@ class TypedPool:
     def free(self, eid: int) -> None:
         """Drop one reference; page becomes EMPTY at refcount 0 (no caching)."""
         page = self.pages[eid]
+        if self.san is not None:
+            # Pre-mutation so double-free / free-while-cached are reported
+            # before the refcount goes negative and corrupts state.
+            self.san.on_free(self.spec.name, eid, page.ref_count)
         page.ref_count -= 1
         if page.ref_count > 0:
             return
@@ -224,6 +239,9 @@ class TypedPool:
                 page.ref_count += 1
                 self.free(eid)
                 return
+        if self.san is not None:
+            self.san.on_cache(self.spec.name, eid, content_hash,
+                              page.owner_rid)
         page.state = PageState.EVICTABLE
         page.content_hash = content_hash
         self.cached[content_hash] = eid
@@ -234,6 +252,9 @@ class TypedPool:
         """Register a *running* request's full page in the prefix cache so
         concurrent requests can share it (cache-while-running)."""
         page = self.pages[eid]
+        if self.san is not None:
+            self.san.on_register(self.spec.name, eid, content_hash,
+                                 page.owner_rid)
         page.content_hash = content_hash
         self.cached.setdefault(content_hash, eid)
 
@@ -250,6 +271,9 @@ class TypedPool:
     def acquire_cached(self, eid: int, rid: str) -> int:
         """Re-reference a cached EVICTABLE page for a prefix hit (→ USED)."""
         page = self.pages[eid]
+        if self.san is not None:
+            self.san.on_acquire(self.spec.name, eid, rid,
+                                page.state == PageState.EVICTABLE)
         if page.state == PageState.EVICTABLE:
             self._evictable.discard(eid)
             page.state = PageState.USED
@@ -288,6 +312,8 @@ class TypedPool:
                 and page.seq == seq
                 and page.state == PageState.EVICTABLE
             ):
+                if self.san is not None:
+                    self.san.on_evict(self.spec.name, eid)
                 self._evictable.discard(eid)
                 self._uncache(page)
                 page.state = PageState.EMPTY
@@ -300,6 +326,8 @@ class TypedPool:
         """Force-evict a specific EVICTABLE page to EMPTY."""
         page = self.pages[eid]
         assert page.state == PageState.EVICTABLE, page
+        if self.san is not None:
+            self.san.on_evict(self.spec.name, eid)
         self._evictable.discard(eid)
         self._uncache(page)
         page.state = PageState.EMPTY

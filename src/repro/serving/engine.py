@@ -63,14 +63,13 @@ import dataclasses
 import os
 import time
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from ..core.manager import JengaKVCacheManager, StateCopyOp
-from ..core.spec import KVCacheSpec
 from .request import Request, SamplingParams, Status
-from .runner import ModelRunner, PreparedStep
+from .runner import ModelRunner
 from .sampler import TIE_EPS, greedy_token, host_sample, rid_hash
 from .scheduler import ScheduledSeq, Scheduler, SchedulerConfig, StepPlan
 
@@ -426,6 +425,9 @@ class Engine:
                 samples = 1 if s.start + s.num_tokens >= len(req.prompt) \
                     else 0
                 inflight_info[req.rid] = (t + s.num_tokens, sm + samples)
+        san = self.mgr.sanitizer
+        if san is not None:
+            san.set_inflight(inflight_info)
         plan = self.scheduler.schedule(inflight=inflight_info)
         self.runner.apply_copies(plan.copy_ops)
         prepared = None
@@ -450,7 +452,16 @@ class Engine:
         wait_ms = queue_ms = compute_ms = 0.0
         target = self._ring_capacity - 1 if prepared is not None else 0
         while len(self._inflight) > target:
-            d, w, q, c = self._complete(self._inflight.popleft())
+            inf = self._inflight.popleft()
+            # rids that STILL have dispatched steps deeper in the ring:
+            # their live state pages keep advancing on device after this
+            # completion's copy ops would run, so checkpoint snapshots and
+            # state caching must be suppressed for them (depth >= 3 only;
+            # at depth 2 the ring is fully drained before a new dispatch)
+            deeper = self._live_inflight_rids()
+            if san is not None:
+                san.set_inflight(deeper)
+            d, w, q, c = self._complete(inf, deeper)
             done.extend(d)
             wait_ms += w
             queue_ms += q
@@ -466,6 +477,7 @@ class Engine:
             # segment, then pop ALL pages committed for never-computed
             # tokens in one trailing rollback.
             killed = False
+            dispatched_kill = False
             si = seg_of.get(req.rid)
             if si is not None:
                 prepared.kill_segment(si)
@@ -478,10 +490,17 @@ class Engine:
                         qinf.live[i] = False
                         self.spec_kills += 1
                         killed = True
+                        # already ON the device: it keeps mutating the
+                        # live state page after this finish
+                        dispatched_kill = True
             if killed:
                 self.spec_rollback_pages += self.mgr.rollback_tokens(
                     req.seq, req.seq.num_computed)
-            self._finish(req)
+            # Killed-but-dispatched deeper steps advance the live state
+            # page past the boundary hash — caching it would poison later
+            # prefix hits. Token KV pages stay cacheable: killed tokens
+            # only ever touched the popped/partial tail pages.
+            self._finish(req, cache_state=not dispatched_kill)
         if prepared is not None:
             # host sampling: decode tokens sampled at completion above are
             # known now — patch them in. (Device sampling board-fed them
@@ -505,12 +524,26 @@ class Engine:
             self._inflight.append(_InflightStep(
                 plan, handle, epochs, live, step=self.step_count,
                 dispatched_at=ti))
+        if san is not None:
+            san.set_inflight(self._live_inflight_rids())
         return self._record_metrics(
             plan, slots_before, build_ms, wait_ms,
             tokens=self.runner.tokens_dispatched - tokens_before,
             issue_ms=issue_ms, queue_ms=queue_ms, compute_ms=compute_ms)
 
-    def _complete(self, inf: _InflightStep):
+    def _live_inflight_rids(self) -> Set[str]:
+        """Rids with live, epoch-valid segments still queued in the ring —
+        i.e. dispatched device work that has not completed yet."""
+        rids: Set[str] = set()
+        for qinf in self._inflight:
+            for i, s in enumerate(qinf.plan.scheduled):
+                if qinf.live[i] and s.req.status == Status.RUNNING \
+                        and s.req.seq.epoch == qinf.epochs[i]:
+                    rids.add(s.req.rid)
+        return rids
+
+    def _complete(self, inf: _InflightStep,
+                  deeper_rids: frozenset = frozenset()):
         """Fetch an in-flight step's results and run its delayed
         sample/advance. Device sampling blocks on the (segments,) int32
         token vector (4 bytes/segment) and only fetches logits rows under
@@ -554,7 +587,8 @@ class Engine:
             post_ops.extend(self._advance(
                 s, None if logits is None else logits[i],
                 done=done, step=inf.step,
-                token=None if tokens is None else int(tokens[i])))
+                token=None if tokens is None else int(tokens[i]),
+                allow_checkpoints=req.rid not in deeper_rids))
         self.runner.apply_copies(post_ops)
         return done, wait_ms, queue_ms, compute_ms
 
@@ -625,7 +659,8 @@ class Engine:
     def _advance(self, s: ScheduledSeq, logits: Optional[np.ndarray],
                  done: Optional[List[Request]] = None,
                  step: Optional[int] = None,
-                 token: Optional[int] = None) -> List[StateCopyOp]:
+                 token: Optional[int] = None,
+                 allow_checkpoints: bool = True) -> List[StateCopyOp]:
         """Post-dispatch bookkeeping for one scheduled sequence: record the
         computed tokens with the manager, sample once past the prompt, and
         return any state-checkpoint copy ops for batched execution. With
@@ -638,7 +673,8 @@ class Engine:
         being recorded."""
         req, seq = s.req, s.req.seq
         step = self.step_count if step is None else step
-        ops = self.mgr.advance(seq, s.num_tokens)
+        ops = self.mgr.advance(seq, s.num_tokens,
+                               allow_checkpoints=allow_checkpoints)
         if s.is_prefill:    # vision free-on-consume only fires during prefill
             self.mgr.consume_mm(seq, seq.num_computed)
         self.mgr.touch(seq)
@@ -692,10 +728,10 @@ class Engine:
         self._sample_ms += (time.perf_counter() - t0) * 1e3
         return tok
 
-    def _finish(self, req: Request) -> None:
+    def _finish(self, req: Request, cache_state: bool = True) -> None:
         if req.finished_step is None:   # async stamps at completion time
             req.finished_step = self.step_count
-        self.scheduler.finish(req, cache=True)
+        self.scheduler.finish(req, cache=True, cache_state=cache_state)
         self.runner.forget(req.rid)
         self.finished.append(req)
 

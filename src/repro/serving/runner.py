@@ -52,7 +52,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -778,6 +778,12 @@ class ModelRunner:
         info = prep.info
         assert not prep.pending, \
             f"segments {prep.pending} still await their decode token"
+        san = self.mgr.sanitizer
+        if san is not None:
+            # gather-from-freed: every page this step reads or writes must
+            # be live RIGHT NOW (killed segments are masked out via
+            # page_seg/-1 sentinels and excluded from the check)
+            san.check_dispatch(prep.arrs)
         # killed segments' tokens are pads now — count their slots as paid
         # (slots) but not as useful work (tokens): they ARE dispatch waste
         dead_tokens = sum(prep.items[si][1] for si in prep.dead)
@@ -825,6 +831,7 @@ class ModelRunner:
         """Phase 3: block on a dispatched step's logits; one row per
         segment, in plan order."""
         h = handle.logits if isinstance(handle, StepHandle) else handle
+        # jengalint: allow[host-sync] fetch phase: this IS the intended blocking point
         out = np.asarray(h[:n], np.float32)
         self.bytes_fetched += out.nbytes
         return out
@@ -835,6 +842,7 @@ class ModelRunner:
         per segment instead of the full vocab row."""
         assert handle.tokens is not None, "dispatch had no sampling tail"
         n = handle.n if n is None else n
+        # jengalint: allow[host-sync] fetch phase: 4-byte/segment token fetch is the design
         out = np.asarray(handle.tokens[:n], np.int32)
         self.bytes_fetched += out.nbytes
         return out

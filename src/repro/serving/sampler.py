@@ -56,6 +56,7 @@ NEG = -1e30
 
 def greedy_token(logits) -> int:
     """Host greedy pick: lowest token id within TIE_EPS of the row max."""
+    # jengalint: allow[host-sync] fetch phase: row was already fetched by runner.fetch
     logits = np.asarray(logits, np.float32)
     return int(np.flatnonzero(logits >= logits.max() - TIE_EPS)[0])
 

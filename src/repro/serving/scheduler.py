@@ -318,9 +318,11 @@ class Scheduler:
         maximal element — the oldest, most-progressed request — inverting
         the recompute-preemption policy whenever arrivals tie (every batch
         submitted before stepping shares one arrival stamp)."""
-        order = {id(r): i for i, r in enumerate(self.running)}
+        # keyed by rid (unique per request), not id(): object identity is
+        # allocation-order dependent and would break bit-for-bit replay
+        order = {r.rid: i for i, r in enumerate(self.running)}
         return max(items, key=lambda it: (key(it).arrival,
-                                          order.get(id(key(it)), -1)))
+                                          order.get(key(it).rid, -1)))
 
     def _preempt(self, req: Request) -> None:
         # an in-flight victim's device state runs ahead of its hash chains —
@@ -334,8 +336,9 @@ class Scheduler:
         self.waiting.appendleft(req)
 
     # ------------------------------------------------------------- finish
-    def finish(self, req: Request, cache: bool = True) -> None:
-        self.mgr.free_request(req.seq, cache=cache)
+    def finish(self, req: Request, cache: bool = True,
+               cache_state: bool = True) -> None:
+        self.mgr.free_request(req.seq, cache=cache, cache_state=cache_state)
         req.status = Status.FINISHED
         if req in self.running:
             self.running.remove(req)

@@ -1,0 +1,11 @@
+# Linted as serving/engine.py — allocator misuse.
+
+
+def admit(mgr, pool, req, eid):
+    page = pool.allocate(req.rid)            # forbidden direct lifecycle
+    pool.free(eid)                           # forbidden
+    pool.release_to_cache(eid, 0)            # forbidden
+    pool.acquire_cached(eid, req.rid)        # forbidden
+    mgr.allocate_for_batch([req], 8)         # forbidden: result discarded
+    mgr.allocate_for_tokens(req, 8)          # forbidden: result discarded
+    return page

@@ -1,0 +1,12 @@
+# Linted as serving/engine.py — transactional allocation, result handled.
+
+
+def admit(mgr, req, scheduler):
+    ok = mgr.allocate_for_tokens(req, 8)
+    if not ok:
+        scheduler.defer(req)                 # defer/preempt outcome handled
+        return False
+    if not mgr.allocate_for_batch([req], 8):
+        mgr.rollback_tokens(req, req.num_computed)
+        return False
+    return True

@@ -1,0 +1,14 @@
+# Linted as serving/sampler.py — every call below is a hot-path host sync.
+import jax
+import numpy as np
+
+
+def prepare_step(logits, x, handle):
+    a = np.asarray(logits)                  # forbidden: device fetch
+    b = np.array(handle)                    # forbidden
+    jax.device_get(x)                       # forbidden
+    x.block_until_ready()                   # forbidden
+    c = x.item()                            # forbidden
+    d = float(x.sum())                      # forbidden: non-trivial arg
+    e = bool(x.any())                       # forbidden
+    return a, b, c, d, e

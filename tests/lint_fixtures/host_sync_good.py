@@ -1,0 +1,12 @@
+# Linted as serving/sampler.py — clean hot-path code.
+import jax.numpy as jnp
+import numpy as np
+
+
+def prepare_step(tokens, x, flag, handle):
+    up = jnp.asarray(tokens)        # upload, not a sync: never flagged
+    y = float(flag)                 # bare name: host scalar, fine
+    z = bool(flag)
+    # jengalint: allow[host-sync] fetch phase: result row already on host
+    out = np.asarray(handle)
+    return up, y, z, out

@@ -1,0 +1,14 @@
+# Linted as kernels/step.py — impure jitted function.
+import jax
+from functools import partial
+
+
+def serve_step(params, x, n):
+    print("tracing", x)                      # forbidden in jitted fn
+    if x > 0:                                # forbidden traced branch
+        x = x + 1
+    out = jax.pure_callback(lambda v: v, x, x)   # forbidden host callback
+    return out, n
+
+
+step = jax.jit(partial(serve_step, None))

@@ -1,0 +1,22 @@
+# Linted as kernels/step.py — clean jitted function.
+import jax
+import jax.numpy as jnp
+from functools import partial
+
+
+def serve_step(params, x, *, prefill):
+    if prefill:                              # kwonly: static flag idiom
+        x = x * 2
+    if x.shape[0] > 1:                       # .shape access is static
+        x = x[:1]
+    return jnp.where(x > 0, x + 1, x)        # traced branch done in-graph
+
+
+step = jax.jit(partial(serve_step, None, prefill=True))
+
+
+def host_helper(x):
+    print("not jitted, print is fine", x)
+    if x > 0:
+        return x + 1
+    return x

@@ -1,0 +1,15 @@
+# Linted as serving/scheduler.py — every construct below breaks replay.
+import random
+import time
+
+
+def schedule(running, waiting):
+    now = time.time()                        # forbidden wall clock
+    t2 = time.perf_counter()                 # forbidden
+    pick = random.choice(waiting)            # forbidden global RNG
+    order = {id(r): i for i, r in enumerate(running)}   # forbidden id()
+    for r in set(running):                   # forbidden set iteration
+        pass
+    firsts = [r for r in {1, 2, 3}]          # forbidden set comprehension
+    it = iter(set(waiting))                  # forbidden
+    return now, t2, pick, order, firsts, it

@@ -1,0 +1,11 @@
+# Linted as serving/scheduler.py — deterministic equivalents.
+import random
+
+
+def schedule(running, waiting, clock):
+    rng = random.Random(0)                   # seeded instance: allowed
+    pick = rng.choice(waiting)
+    order = {r.rid: i for i, r in enumerate(running)}   # rid-keyed
+    for r in sorted(set(running), key=lambda r: r.rid):  # sorted first
+        pass
+    return clock, pick, order

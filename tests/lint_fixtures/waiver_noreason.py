@@ -1,0 +1,7 @@
+# Linted as serving/sampler.py — waiver without a reason is a violation.
+import numpy as np
+
+
+def fetch(handle):
+    # jengalint: allow[host-sync]
+    return np.asarray(handle)

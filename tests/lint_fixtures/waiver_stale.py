@@ -1,0 +1,6 @@
+# Linted as serving/sampler.py — waiver that matches nothing is stale.
+
+
+def clean(x):
+    # jengalint: allow[host-sync] this line has no violation at all
+    return x + 1

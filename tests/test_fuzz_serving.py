@@ -108,6 +108,9 @@ def check_drained(eng, n_req):
     assert len(eng.finished) == n_req, \
         (len(eng.finished), eng.scheduler.preemption_count)
     eng.mgr.check_invariants()
+    san = getattr(eng.mgr, "sanitizer", None)
+    if san is not None:     # REPRO_PAGE_SANITIZER=1 CI leg
+        san.assert_drained()
     stats = eng.mgr.memory_stats()
     assert stats.used_units == 0, f"leaked referenced pages: {stats}"
     assert not eng.runner._mirrors, list(eng.runner._mirrors)
@@ -293,6 +296,9 @@ def check_drained_dp(dp, n_req):
         assert stats.used_units == 0, (sh.sid, stats)
         assert not sh.engine.runner._mirrors, \
             (sh.sid, list(sh.engine.runner._mirrors))
+        san = getattr(sh.engine.mgr, "sanitizer", None)
+        if san is not None:
+            san.assert_drained()
 
 
 def run_dp(arch, workload, *, n_shards, pool=8 << 20, caching=True,

@@ -1,0 +1,125 @@
+"""jengalint rule coverage: every rule has known-bad and known-good
+fixtures, waiver hygiene is itself linted, and the real tree is clean."""
+import pathlib
+import subprocess
+import sys
+
+from repro.analysis import jengalint
+from repro.analysis.jengalint import lint_source, lint_tree
+
+FIXTURES = pathlib.Path(__file__).parent / "lint_fixtures"
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def run_fixture(name, relpath):
+    """Lint a fixture under a virtual in-package path (rule scoping keys
+    on the relpath, not on where the fixture file actually lives)."""
+    src = (FIXTURES / name).read_text()
+    return lint_source(src, relpath)
+
+
+def rules_of(violations):
+    return [v.rule for v in violations]
+
+
+# ------------------------------------------------------------- host-sync
+def test_host_sync_bad_fixture_flags_every_sync():
+    vs = run_fixture("host_sync_bad.py", "serving/sampler.py")
+    assert rules_of(vs) == ["host-sync"] * 7, vs
+
+
+def test_host_sync_good_fixture_is_clean():
+    assert run_fixture("host_sync_good.py", "serving/sampler.py") == []
+
+
+def test_host_sync_scoping_only_hot_path():
+    # the same bad source outside the hot path is not host-sync's business
+    vs = run_fixture("host_sync_bad.py", "serving/engine.py")
+    assert "host-sync" not in rules_of(vs)
+    # kernels/ prefix is in scope
+    vs = run_fixture("host_sync_bad.py", "kernels/foo.py")
+    assert "host-sync" in rules_of(vs)
+
+
+# ---------------------------------------------------------------- nondet
+def test_nondet_bad_fixture():
+    vs = run_fixture("nondet_bad.py", "serving/scheduler.py")
+    assert rules_of(vs) == ["nondet"] * 7, vs
+
+
+def test_nondet_good_fixture_is_clean():
+    assert run_fixture("nondet_good.py", "serving/scheduler.py") == []
+
+
+def test_nondet_scoping():
+    vs = run_fixture("nondet_bad.py", "serving/engine.py")
+    assert "nondet" not in rules_of(vs)
+
+
+# ---------------------------------------------------------- alloc-direct
+def test_alloc_bad_fixture():
+    vs = run_fixture("alloc_bad.py", "serving/engine.py")
+    assert rules_of(vs) == ["alloc-direct"] * 6, vs
+
+
+def test_alloc_good_fixture_is_clean():
+    assert run_fixture("alloc_good.py", "serving/engine.py") == []
+
+
+def test_alloc_core_modules_may_call_lifecycle():
+    # manager.py IS allowed direct lifecycle calls — but a discarded
+    # transactional result is flagged everywhere, core included
+    vs = run_fixture("alloc_bad.py", "core/manager.py")
+    assert rules_of(vs) == ["alloc-direct"] * 2, vs
+
+
+# ----------------------------------------------------------- jit-hygiene
+def test_jit_bad_fixture():
+    vs = run_fixture("jit_bad.py", "kernels/step.py")
+    assert rules_of(vs) == ["jit-hygiene"] * 3, vs
+
+
+def test_jit_good_fixture_is_clean():
+    assert run_fixture("jit_good.py", "kernels/step.py") == []
+
+
+# -------------------------------------------------------- waiver hygiene
+def test_waiver_without_reason_is_flagged():
+    vs = run_fixture("waiver_noreason.py", "serving/sampler.py")
+    assert "waiver-reason" in rules_of(vs), vs
+
+
+def test_stale_waiver_is_flagged():
+    vs = run_fixture("waiver_stale.py", "serving/sampler.py")
+    assert rules_of(vs) == ["stale-waiver"], vs
+
+
+def test_waiver_suppresses_only_named_rule():
+    src = ("import numpy as np\n"
+           "# jengalint: allow[nondet] wrong rule name for this line\n"
+           "x = np.asarray(1)\n")
+    vs = lint_source(src, "serving/sampler.py")
+    # host-sync violation survives AND the nondet waiver is stale
+    assert sorted(rules_of(vs)) == ["host-sync", "stale-waiver"], vs
+
+
+# ------------------------------------------------------------- self-check
+def test_tree_is_clean():
+    """The enforced contract: zero unwaived violations on src/repro."""
+    assert lint_tree() == []
+
+
+def test_every_waiver_in_tree_has_reason():
+    root = jengalint.find_package_root()
+    for path in sorted(root.rglob("*.py")):
+        rel = path.relative_to(root).as_posix()
+        for w in jengalint.list_waivers(path.read_text(), rel):
+            assert w.reason, f"{rel}:{w.line} waiver without reason"
+
+
+def test_run_lint_script_exits_zero():
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "run_lint.py")],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "clean" in proc.stdout

@@ -391,7 +391,99 @@ def run_router_ab(arch: str = "granite-3-2b", shards: int = 3):
     return dict(arch=arch, shards=shards, **rows)
 
 
+def run_disagg_ab(arch: str = "granite-3-2b", n_req=12, prompt=96, out=24,
+                  budget=128):
+    """Prefill/decode disaggregation A/B on a long-prompt + decode-heavy
+    mix (the regime the split exists for: huge prompts competing with
+    decode latency). Two timed legs over identical requests and arrival
+    ticks on a 2-shard fleet: COLOCATED (both shards prefill+decode,
+    the PR-8 default) and DISAGG (shard 0 prefill-only, shard 1
+    decode-only, typed-page handoff at the prompt boundary). Gates:
+    every request finishes exactly once in both legs, the split leg
+    hands off every request, and its decode shard computes ZERO prefill
+    tokens — the handoff replaced recompute entirely. Recorded per leg:
+    handoff count and pages moved, per-shard prefill/decode token mix
+    (the phase isolation the A/B is about), mean request latency in
+    fleet ticks, and the dispatch issue/queue/compute timing split per
+    shard."""
+    cfg = reduced(ARCHS[arch])
+    model = build_model(cfg, single_device_dist())
+    params = model.init(0)
+    ecfg = EngineConfig(kv_pool_bytes=48 << 20, max_running=8,
+                        chunk_size=32, batching_mode="packed",
+                        max_num_batched_tokens=budget,
+                        enable_prefix_caching=True)
+    rows = {}
+    legs = (("warmup", None), ("colocated", None),
+            ("disagg", ["prefill", "decode"]))
+    for tag, roles in legs:
+        dp = DPEngine(model, ecfg, params=params, num_shards=2,
+                      roles=roles)
+        t0 = time.perf_counter()
+        for i in range(n_req):
+            dp.submit(Request(rid=f"r{i}", prompt=[(7 * i + j) % 101
+                                                   for j in range(prompt)],
+                              sampling=SamplingParams(max_new_tokens=out)))
+            dp.step()       # staggered arrivals: decodes run under prefills
+        guard = 0
+        while dp.has_work:
+            dp.step()
+            guard += 1
+            assert guard < 4000, tag
+        wall = time.perf_counter() - t0
+        if tag == "warmup":
+            continue
+        rids = [r.rid for r in dp.finished]
+        assert len(rids) == n_req and len(set(rids)) == n_req, (tag, rids)
+        fs = dp.fleet_stats()
+        shards = []
+        for sh in dp.shards:
+            ms = sh.engine.metrics
+            pf = sum(m.prefill_tokens for m in ms)
+            tot = sum(m.batched_tokens for m in ms)
+            shards.append(dict(
+                role=sh.engine.role,
+                steps=sh.engine.step_count,
+                prefill_tokens=pf,
+                decode_tokens=tot - pf,
+                dispatch_issue_ms=sum(m.dispatch_issue_ms for m in ms),
+                dispatch_queue_ms=sum(m.dispatch_queue_ms for m in ms),
+                dispatch_compute_ms=sum(m.dispatch_compute_ms for m in ms),
+                host_build_ms=sum(m.host_build_ms for m in ms),
+            ))
+        lat = sum(dp.finish_tick[r] - dp.submit_tick[r]
+                  for r in dp.finish_tick) / max(1, len(dp.finish_tick))
+        rows[tag] = dict(
+            shards=shards, wall_s=wall, mean_latency_ticks=lat,
+            handoffs=fs.get("handoffs", 0),
+            handoff_pages=fs.get("handoff_pages", 0),
+            role_failovers=fs.get("role_failovers", 0))
+    d = rows["disagg"]
+    # the handoff contract: every request moved, none recomputed prefill
+    assert d["handoffs"] == n_req, (d["handoffs"], n_req)
+    assert d["role_failovers"] == 0, d
+    assert d["shards"][1]["prefill_tokens"] == 0, d["shards"][1]
+    assert d["shards"][0]["decode_tokens"] == 0, d["shards"][0]
+    assert rows["colocated"]["handoffs"] == 0
+    return dict(arch=arch, n_req=n_req, prompt=prompt, out=out,
+                budget=budget, **rows)
+
+
 def main(report=print, only: str = None):
+    if only == "disagg":
+        db = run_disagg_ab()
+        path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_disagg.json")
+        with open(path, "w") as f:
+            json.dump(db, f, indent=2, sort_keys=True)
+        d, c = db["disagg"], db["colocated"]
+        report(f"disagg_ab,0,"
+               f"handoffs={d['handoffs']} pages={d['handoff_pages']} "
+               f"decode_shard_prefill_tok={d['shards'][1]['prefill_tokens']} "
+               f"lat_disagg={d['mean_latency_ticks']:.1f} "
+               f"lat_coloc={c['mean_latency_ticks']:.1f} "
+               f"-> {path}")
+        return
     if only == "router":
         rb = run_router_ab()
         path = os.path.join(os.path.dirname(os.path.dirname(
@@ -478,6 +570,9 @@ def main(report=print, only: str = None):
     # data-parallel router A/B: cache-aware vs round-robin placement over
     # an N-shard fleet, 1-shard fleet bitwise == solo engine; JSON'd.
     main(report, only="router")
+    # prefill/decode disaggregation A/B: typed-page handoff vs colocated,
+    # zero prefill recompute on the decode shard; JSON'd.
+    main(report, only="disagg")
 
 
 if __name__ == "__main__":

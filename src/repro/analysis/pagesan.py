@@ -20,6 +20,10 @@ Detected bug classes:
   rule, extended to EOS-kill reconciliation and checkpoint copies)
 * leaks at drain         — ``assert_drained`` lists every ALLOCATED page
   with its owner and allocation site
+* lost in transit        — a page exported for a prefill->decode handoff
+  (IN_TRANSIT) that was never released or cancelled: ``assert_drained``
+  reports it separately from plain leaks, and freeing/caching/double-
+  exporting an IN_TRANSIT page errors at the call site
 
 Cost model: the pool guards every event call with ``if self.san is not
 None`` — a single attribute test when disabled (``REPRO_PAGE_SANITIZER``
@@ -53,6 +57,10 @@ FREE = "FREE"
 ALLOCATED = "ALLOCATED"
 CACHED = "CACHED"
 POISONED = "POISONED"
+# Exported for a prefill->decode handoff: the pool still counts the page
+# USED (the copy stream reads it), but no further lifecycle event is legal
+# until the export is released (on_export_done) or cancelled.
+IN_TRANSIT = "IN_TRANSIT"
 
 
 class PageSanError(RuntimeError):
@@ -165,6 +173,11 @@ class PageSanitizer:
                 name, eid, rec,
                 "free of a page sitting in the prefix cache (must be "
                 "evicted or acquired first)")
+        if rec.state == IN_TRANSIT:
+            raise self._fail(
+                name, eid, rec,
+                "free of a page exported for handoff (the export must be "
+                "released or cancelled first)")
         if ref_count <= 0:
             raise self._fail(name, eid, rec,
                              f"free with non-positive refcount {ref_count}")
@@ -227,6 +240,36 @@ class PageSanitizer:
                 f"shared re-acquire of a page in state {rec.state}")
         rec.owner_rid = rid
 
+    def on_export(self, name: str, eid: int, rid: str) -> None:
+        """Page set exported for a prefill->decode handoff: the page stays
+        USED in the pool (the cross-shard copy stream still reads it) but
+        enters the explicit IN_TRANSIT shadow state — free/cache/re-export
+        while in transit are bugs, and an export never released shows up
+        at drain as lost-in-transit rather than a generic leak."""
+        rec = self._rec(name, eid)
+        if rec.state == IN_TRANSIT:
+            raise self._fail(name, eid, rec,
+                             "double export of a page already in transit")
+        if rec.state != ALLOCATED:
+            raise self._fail(name, eid, rec,
+                             f"export of a page in state {rec.state}")
+        rec.state = IN_TRANSIT
+        rec.owner_rid = rid
+        rec.site = _call_site()
+
+    def on_export_done(self, name: str, eid: int) -> None:
+        """Handoff finished (adopted on the destination) or cancelled: the
+        source page returns to plain ALLOCATED ownership so the exporter
+        can free/cache it normally. A page NOT in transit here means the
+        same export was completed twice (double adopt)."""
+        rec = self._rec(name, eid)
+        if rec.state != IN_TRANSIT:
+            raise self._fail(
+                name, eid, rec,
+                f"export completion of a page in state {rec.state} "
+                f"(double adopt of the same export?)")
+        rec.state = ALLOCATED
+
     def on_evict(self, name: str, eid: int) -> None:
         rec = self._rec(name, eid)
         if rec.state != CACHED:
@@ -281,15 +324,25 @@ class PageSanitizer:
 
     def assert_drained(self) -> None:
         """Leak check once every request finished: nothing may still be
-        ALLOCATED (CACHED pages are fine — that is the prefix cache)."""
+        ALLOCATED (CACHED pages are fine — that is the prefix cache), and
+        no export may still be IN_TRANSIT (a handoff that never completed
+        nor cancelled lost its pages in transit)."""
         leaks = self.live_pages()
-        if leaks:
+        transit = [(name, eid, rec)
+                   for name, pages in sorted(self.shadow.items())
+                   for eid, rec in sorted(pages.items())
+                   if rec.state == IN_TRANSIT]
+        if leaks or transit:
             lines = [f"  type={n} page={e} owner={r.owner_rid!r} "
                      f"allocated_at={r.site}" for n, e, r in leaks]
+            lines += [f"  type={n} page={e} owner={r.owner_rid!r} "
+                      f"LOST IN TRANSIT exported_at={r.site}"
+                      for n, e, r in transit]
             self.errors_raised += 1
             raise PageSanError(
-                "PageSan: %d leaked page(s) at drain:\n%s"
-                % (len(leaks), "\n".join(lines)))
+                "PageSan: %d leaked / %d lost-in-transit page(s) at "
+                "drain:\n%s"
+                % (len(leaks), len(transit), "\n".join(lines)))
 
     def verify(self, pools) -> None:
         """Cross-check shadow vs the pools' real PageState — called from
@@ -310,6 +363,11 @@ class PageSanitizer:
                 rec = shadow[eid]
                 if rec.state == POISONED:
                     continue    # already reported; state is post-mortem
+                if rec.state == IN_TRANSIT:
+                    # exported pages stay USED in the pool until the
+                    # handoff is released or cancelled
+                    if page.state == PageState.USED:
+                        continue
                 if rec.state != expect[page.state]:
                     raise PageSanError(
                         f"PageSan: shadow diverged for {name} page {eid}: "

@@ -46,6 +46,32 @@ class StateCopyOp:
 
 
 @dataclasses.dataclass
+class PageSetExport:
+    """Snapshot of one request's typed page set for a prefill->decode
+    handoff (§5.2 whole-prompt transfer unit): the per-type page tables
+    with their boundary-chain hashes — the exact keys
+    ``router.prefix_match_tokens`` probes — plus the live/checkpoint state
+    pages and the hash-chain continuations the destination needs to keep
+    extending the chains. The exported pages stay USED on the source
+    (marked IN_TRANSIT in the sanitizer) until the handoff is released or
+    cancelled; the destination allocates its own pages and the caller
+    performs the device copies the returned (src, dst) pairs describe."""
+
+    rid: str
+    num_tokens: int                    # == num_computed == len(prompt)
+    page_tables: Dict[str, List[int]]
+    page_hashes: Dict[str, List[Optional[int]]]
+    num_cached_pages: Dict[str, int]
+    state_pages: Dict[str, int]
+    ckpt_pages: Dict[str, Dict[int, int]]
+    # hash-chain continuations (aux state), copied verbatim
+    token_chain: Dict[str, List[int]]
+    mm_chain: Dict[str, List[int]]
+    state_chain: Dict[str, List[int]]
+    state_boundary_hash: Dict[str, Dict[int, int]]
+
+
+@dataclasses.dataclass
 class TypeStats:
     page_units: int
     used: int
@@ -89,7 +115,7 @@ class _ReqAux:
 
     __slots__ = (
         "keys", "mm_keys", "enc_keys", "token_chain", "mm_chain",
-        "state_chain", "state_boundary_hash",
+        "state_chain", "state_boundary_hash", "suppressed_ckpts",
     )
 
     def __init__(self) -> None:
@@ -103,6 +129,9 @@ class _ReqAux:
         self.state_chain: Dict[str, List[int]] = {}
         # type -> {boundary_pos: hash}
         self.state_boundary_hash: Dict[str, Dict[int, int]] = {}
+        # type -> boundary positions whose checkpoint was suppressed
+        # (allow_checkpoints=False) and awaits a catch-up snapshot
+        self.suppressed_ckpts: Dict[str, List[int]] = {}
 
 
 class JengaKVCacheManager:
@@ -154,6 +183,12 @@ class JengaKVCacheManager:
         # running stats
         self.prefix_hit_tokens_total = 0
         self.prefix_query_tokens_total = 0
+        # deferred-checkpoint + handoff accounting
+        self.suppressed_checkpoints = 0
+        self.catchup_checkpoints = 0
+        self.handoff_exports = 0
+        self.handoff_adopted = 0
+        self.handoff_pages_adopted = 0
 
     # ------------------------------------------------------------------ util
     @property
@@ -539,7 +574,14 @@ class JengaKVCacheManager:
         ``allow_checkpoints=False`` suppresses new state-checkpoint copies:
         required when deeper in-flight steps will keep mutating the live
         state page AFTER this copy op would execute — the snapshot would
-        capture over-advanced state under a too-early boundary hash."""
+        capture over-advanced state under a too-early boundary hash.
+        Suppressed boundaries are recorded, not dropped: the next advance
+        with ``allow_checkpoints=True`` (the rid has no deeper in-flight
+        steps — at the latest its final ring completion) emits catch-up
+        checkpoint copies for them, so depth >= 3 pipelines keep the same
+        restart/prefix granularity as the sync path. At depth <= 2 every
+        completion runs with ``allow_checkpoints=True``, so the deferral
+        machinery is a provable no-op there."""
         aux = self._ensure_aux(req)
         old = req.num_computed
         req.num_computed = min(old + num_new, len(req.tokens))
@@ -585,13 +627,42 @@ class JengaKVCacheManager:
                 interval = spec.state_checkpoint_interval
                 chain = aux.state_chain.setdefault(name, [0, salt])
                 bh = aux.state_boundary_hash.setdefault(name, {})
+                pending = aux.suppressed_ckpts.setdefault(name, [])
+                if (pending and allow_checkpoints and caching
+                        and name in req.state_pages):
+                    # catch-up: snapshot boundaries whose checkpoint was
+                    # suppressed while deeper steps were in flight. The live
+                    # page is now a few tokens past the boundary — the same
+                    # approximation the sync path makes when one chunk
+                    # crosses several boundaries before its copy ops run.
+                    still: List[int] = []
+                    for pos in pending:
+                        if pos in req.ckpt_pages.get(name, {}):
+                            continue
+                        ck = pool.allocate(req.rid)
+                        if ck is None:  # best-effort: retry next quiet advance
+                            still.append(pos)
+                            continue
+                        req.ckpt_pages.setdefault(name, {})[pos] = ck
+                        pool.register_hash(ck, bh[pos])
+                        pool.pages[ck].last_access = now
+                        copy_ops.append(StateCopyOp(
+                            name, req.state_pages[name], ck,
+                            pos, "checkpoint",
+                        ))
+                        self.catchup_checkpoints += 1
+                    pending[:] = still
                 while caching and chain[0] < req.num_computed:
                     chain[1] = pc.combine(chain[1], aux.keys[chain[0]])
                     chain[0] += 1
                     if chain[0] % interval == 0:
                         bh[chain[0]] = chain[1]
-                        if (allow_checkpoints and self.enable_prefix_caching
+                        if (self.enable_prefix_caching
                                 and name in req.state_pages):
+                            if not allow_checkpoints:
+                                pending.append(chain[0])
+                                self.suppressed_checkpoints += 1
+                                continue
                             ck = pool.allocate(req.rid)
                             if ck is not None:  # best-effort checkpointing
                                 req.ckpt_pages.setdefault(name, {})[chain[0]] = ck
@@ -737,6 +808,163 @@ class JengaKVCacheManager:
         req.state_pages.clear()
         req.ckpt_pages.clear()
         req.num_cached_pages.clear()
+
+    # ------------------------------------------- prefill->decode handoff
+    def _export_pages(self, export: PageSetExport):
+        """Yield (type, eid) for every live page an export references, in a
+        deterministic order."""
+        for name in sorted(export.page_tables):
+            for eid in export.page_tables[name]:
+                if eid != SequenceState.FREED:
+                    yield name, eid
+        for name in sorted(export.state_pages):
+            yield name, export.state_pages[name]
+        for name in sorted(export.ckpt_pages):
+            cks = export.ckpt_pages[name]
+            for pos in sorted(cks):
+                yield name, cks[pos]
+
+    def export_request(self, req: SequenceState) -> PageSetExport:
+        """Snapshot ``req``'s typed page set for a prefill->decode handoff.
+
+        The request must be quiet (no in-flight steps). Pages stay USED and
+        owned by ``req`` on this manager — the copy stream still reads them
+        — but the sanitizer moves them to IN_TRANSIT so freeing, caching or
+        re-exporting before ``release_export``/``cancel_export`` is caught,
+        and an abandoned export shows up as lost-in-transit at drain."""
+        aux = self._ensure_aux(req)
+        export = PageSetExport(
+            rid=req.rid,
+            num_tokens=req.num_computed,
+            page_tables={k: list(v) for k, v in req.page_tables.items()},
+            page_hashes={k: list(v) for k, v in req.page_hashes.items()},
+            num_cached_pages=dict(req.num_cached_pages),
+            state_pages=dict(req.state_pages),
+            ckpt_pages={k: dict(v) for k, v in req.ckpt_pages.items()},
+            token_chain={k: list(v) for k, v in aux.token_chain.items()},
+            mm_chain={k: list(v) for k, v in aux.mm_chain.items()},
+            state_chain={k: list(v) for k, v in aux.state_chain.items()},
+            state_boundary_hash={
+                k: dict(v) for k, v in aux.state_boundary_hash.items()},
+        )
+        for name, eid in self._export_pages(export):
+            self.pools[name].mark_exported(eid, req.rid)
+        self.handoff_exports += 1
+        return export
+
+    def adopt_request(self, req: SequenceState,
+                      export: PageSetExport) -> Tuple[bool, List[Tuple[str, int, int]]]:
+        """Install an exported page set into THIS manager's pools so ``req``
+        resumes as a whole-prompt prefix hit (§5.2): fresh pages are
+        allocated mirroring the export's tables, full-page / boundary hashes
+        are registered in this manager's prefix cache, and the hash-chain
+        aux is rebuilt from the export so decode keeps extending the chains
+        exactly where the source stopped.
+
+        Returns ``(ok, pairs)`` where ``pairs`` lists ``(type, src_eid,
+        dst_eid)`` device copies the caller must perform against the SOURCE
+        engine's buffers. Transactional: on pool exhaustion every allocation
+        is rolled back, ``req`` is cleared, and ``(False, [])`` returns.
+
+        Deliberately bypasses the fresh-page zeroing queue: the handoff copy
+        fills each page before its first dispatch, and a later zeroing pass
+        would destroy the adopted content."""
+        assert req.rid == export.rid
+        now = self.tick()
+        journal: List[Tuple[TypedPool, int]] = []
+        pairs: List[Tuple[str, int, int]] = []
+
+        def rollback() -> Tuple[bool, List[Tuple[str, int, int]]]:
+            for pool, eid in reversed(journal):
+                pool.free(eid)
+            req.page_tables.clear()
+            req.page_hashes.clear()
+            req.state_pages.clear()
+            req.ckpt_pages.clear()
+            req.num_cached_pages.clear()
+            self._aux.pop(req.rid, None)
+            return False, []
+
+        caching = self.enable_prefix_caching
+        for spec in self.specs:
+            name, pool = spec.name, self.pools[spec.name]
+            if spec.kind in STATE_KINDS:
+                src_live = export.state_pages.get(name)
+                if src_live is None:
+                    continue
+                live = pool.allocate(req.rid)
+                if live is None:
+                    return rollback()
+                journal.append((pool, live))
+                req.state_pages[name] = live
+                pool.pages[live].last_access = now
+                pairs.append((name, src_live, live))
+                bh = export.state_boundary_hash.get(name, {})
+                req.ckpt_pages.setdefault(name, {})
+                cks = export.ckpt_pages.get(name, {})
+                for pos in sorted(cks):
+                    ck = pool.allocate(req.rid)
+                    if ck is None:
+                        return rollback()
+                    journal.append((pool, ck))
+                    req.ckpt_pages[name][pos] = ck
+                    pool.pages[ck].last_access = now
+                    h = bh.get(pos)
+                    if caching and h is not None:
+                        pool.register_hash(ck, h)
+                    pairs.append((name, cks[pos], ck))
+            else:  # token + mm kinds
+                table = export.page_tables.get(name, [])
+                hlist = export.page_hashes.get(name, [])
+                new_table: List[int] = []
+                for i, src_eid in enumerate(table):
+                    if src_eid == SequenceState.FREED:
+                        new_table.append(SequenceState.FREED)
+                        continue
+                    eid = pool.allocate(req.rid)
+                    if eid is None:
+                        return rollback()
+                    journal.append((pool, eid))
+                    new_table.append(eid)
+                    pool.pages[eid].last_access = now
+                    h = hlist[i] if i < len(hlist) else None
+                    if caching and h is not None:
+                        pool.register_hash(eid, h)
+                    pairs.append((name, src_eid, eid))
+                req.page_tables[name] = new_table
+                req.page_hashes[name] = list(hlist)
+                req.num_cached_pages[name] = export.num_cached_pages.get(name, 0)
+        # rebuild hash-chain aux so decode continues the chains verbatim
+        self._aux.pop(req.rid, None)
+        aux = self._ensure_aux(req)
+        aux.token_chain = {k: list(v) for k, v in export.token_chain.items()}
+        aux.mm_chain = {k: list(v) for k, v in export.mm_chain.items()}
+        aux.state_chain = {k: list(v) for k, v in export.state_chain.items()}
+        aux.state_boundary_hash = {
+            k: dict(v) for k, v in export.state_boundary_hash.items()}
+        req.num_computed = export.num_tokens
+        req.prefix_hit_tokens = export.num_tokens
+        req.last_access = now
+        self.handoff_adopted += 1
+        self.handoff_pages_adopted += len(pairs)
+        return True, pairs
+
+    def release_export(self, req: SequenceState, export: PageSetExport) -> None:
+        """Destination adopted the page set: return the exported pages to
+        plain USED ownership, then retire the source copy of the request —
+        token and state pages enter THIS manager's prefix cache exactly as
+        a normal completion would, so future shared-prompt arrivals still
+        hit on the prefill shard."""
+        for name, eid in self._export_pages(export):
+            self.pools[name].mark_export_done(eid)
+        self.free_request(req, cache=True, cache_state=True)
+
+    def cancel_export(self, export: PageSetExport) -> None:
+        """Adoption failed (destination pool pressure) or the destination
+        died mid-handoff: lift the IN_TRANSIT marks; the source keeps owning
+        and running the request as if the export never happened."""
+        for name, eid in self._export_pages(export):
+            self.pools[name].mark_export_done(eid)
 
     # --------------------------------------------------------------- queries
     def block_table(self, req: SequenceState, type_name: str) -> List[int]:

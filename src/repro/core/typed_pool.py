@@ -258,6 +258,25 @@ class TypedPool:
         page.content_hash = content_hash
         self.cached.setdefault(content_hash, eid)
 
+    def mark_exported(self, eid: int, rid: str) -> None:
+        """Flag a USED page as exported for a prefill->decode handoff. The
+        pool state is unchanged — the page stays USED and refcounted by its
+        owner (the copy stream still reads it) — but the sanitizer's shadow
+        moves to IN_TRANSIT so free/cache/re-export while the handoff is
+        pending are caught, and an abandoned export is reported at drain."""
+        page = self.pages[eid]
+        assert page.state == PageState.USED, (eid, page.state)
+        if self.san is not None:
+            self.san.on_export(self.spec.name, eid, rid)
+
+    def mark_export_done(self, eid: int) -> None:
+        """Handoff adopted (or cancelled): return the exported page to
+        plain USED ownership so the exporter can free/cache it normally."""
+        page = self.pages[eid]
+        assert page.state == PageState.USED, (eid, page.state)
+        if self.san is not None:
+            self.san.on_export_done(self.spec.name, eid)
+
     def _uncache(self, page: SmallPage) -> None:
         if page.content_hash is not None:
             if self.cached.get(page.content_hash) == page.exec_id:

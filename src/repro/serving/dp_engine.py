@@ -43,11 +43,12 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
+from ..core.request import SequenceState
 from .autotune import BudgetAutotuner, shard_pool_bytes
 from .engine import Engine, EngineConfig, ShardHealth, StepMetrics
-from .request import Request
+from .request import Request, Status
 from .router import Router, RouterConfig
 
 
@@ -90,6 +91,7 @@ class DPEngine:
                  router_cfg: Optional[RouterConfig] = None, *,
                  num_shards: Optional[int] = None,
                  policy: Optional[str] = None,
+                 roles: Optional[Sequence[str]] = None,
                  params=None, split_pool: bool = True,
                  stall_escalate_ticks: int = 0, seed: int = 0):
         if router_cfg is None:
@@ -108,9 +110,16 @@ class DPEngine:
             shard_cfg = dataclasses.replace(
                 cfg, kv_pool_bytes=shard_pool_bytes(cfg.kv_pool_bytes, n))
         params = params if params is not None else model.init(seed)
+        if roles is not None:
+            assert len(roles) == n, (len(roles), n)
+            assert all(r in ("both", "prefill", "decode") for r in roles), \
+                roles
         self.shards: List[EngineShard] = []
         for sid in range(n):
-            eng = Engine(model, shard_cfg, params=params, seed=seed)
+            cfg_i = shard_cfg
+            if roles is not None:
+                cfg_i = dataclasses.replace(shard_cfg, role=roles[sid])
+            eng = Engine(model, cfg_i, params=params, seed=seed)
             if shard_cfg.autotune_budgets:
                 eng.autotuner = BudgetAutotuner(model.cfg, num_shards=n)
                 eng.scheduler.set_budgets(eng.autotuner.budget,
@@ -120,6 +129,11 @@ class DPEngine:
         self.submit_tick: Dict[str, int] = {}
         self.finish_tick: Dict[str, int] = {}
         self._parked: List[Request] = []    # re-admissions with no shard up
+        # prefill->decode handoff log (one dict per completed handoff) and
+        # the count of colocated failovers (prefill shards flipped to
+        # "both" because no decode-capable shard was left)
+        self.handoffs: List[dict] = []
+        self.role_failovers = 0
 
     # -------------------------------------------------------------- submit
     def submit(self, req: Request, readmitted: bool = False) -> int:
@@ -129,7 +143,10 @@ class DPEngine:
             self._parked.append(req)
             self.submit_tick.setdefault(req.rid, self.tick)
             return -1
-        sid = self.router.place(req, self.shards, readmitted=readmitted)
+        # fresh arrivals need a prefill-capable shard; decode-only shards
+        # receive work through the handoff path only
+        sid = self.router.place(req, self.shards, readmitted=readmitted,
+                                want="prefill")
         self.shards[sid].engine.submit(req)
         self.submit_tick.setdefault(req.rid, self.tick)
         return sid
@@ -194,6 +211,7 @@ class DPEngine:
             if m is not None:
                 out.append(m)
             self.router.observe(sh.sid, sh.engine.health_snapshot())
+        self._do_handoffs()
         if self._parked and any(sh.accepting for sh in self.shards):
             parked, self._parked = self._parked, []
             self._readmit(parked)
@@ -203,6 +221,68 @@ class DPEngine:
                 self.finish_tick.setdefault(req.rid, self.tick)
             sh.finished_seen = len(fin)
         return out
+
+    # ------------------------------------------ prefill->decode handoffs
+    def _do_handoffs(self) -> None:
+        """Move every handoff-ready request (prompt complete + first token
+        sampled on a prefill shard, nothing in flight) to a decode-capable
+        shard: export the typed page set, place with the router
+        (``want="decode"``), adopt into the destination's pools + prefix
+        cache, device-copy the pages across runners, and re-admit the
+        request as a whole-prompt prefix hit — ``num_computed`` set to the
+        prompt length, ``started`` reset, ZERO prefill tokens recomputed.
+
+        Failure handling: adoption failure (destination pool pressure)
+        cancels the export and retries next tick; a fleet with no live
+        decode-capable shard flips its prefill shards to colocated "both"
+        so requests finish where they are (degraded, but serving)."""
+        srcs = [sh for sh in self.shards
+                if sh.alive and not sh.stalled and sh.engine.role == "prefill"
+                and sh.engine.handoff_ready()]
+        if not srcs:
+            return
+        can_decode = any(
+            sh.alive and sh.accepting and sh.engine.role in ("both", "decode")
+            for sh in self.shards)
+        if not can_decode:
+            # colocated failover: no decode-capable shard left — prefill
+            # shards take their parked requests through decode themselves
+            for sh in self.shards:
+                if sh.alive and sh.engine.role == "prefill":
+                    sh.engine.set_role("both")
+            self.role_failovers += 1
+            return
+        for sh in srcs:
+            for req in sh.engine.handoff_ready():
+                export = sh.engine.begin_handoff(req)
+                dst_sid = self.router.place(req, self.shards, want="decode")
+                dst = self.shards[dst_sid]
+                if dst is sh:       # filter fell back to the source itself
+                    sh.engine.cancel_handoff(req, export)
+                    continue
+                src_seq = req.seq
+                dst_seq = SequenceState(
+                    rid=req.rid, tokens=list(src_seq.tokens),
+                    mm_items=src_seq.mm_items,
+                    encoder_items=src_seq.encoder_items)
+                ok, pairs = dst.engine.mgr.adopt_request(dst_seq, export)
+                if not ok:
+                    sh.engine.cancel_handoff(req, export)
+                    continue
+                # copy stream: exported pages -> the destination's buffer
+                dst.engine.runner.adopt_pages(sh.engine.runner, pairs)
+                rows = sh.engine.sample_log.pop(req.rid, None)
+                sh.engine.complete_handoff(req, export)
+                req.seq = dst_seq
+                req.status = Status.WAITING
+                req.started = False
+                dst.engine.submit(req)      # admits as a whole-prompt hit
+                if rows is not None:        # keep recorded rows aligned
+                    dst.engine.sample_log[req.rid] = rows
+                self.handoffs.append(dict(
+                    rid=req.rid, src=sh.sid, dst=dst_sid,
+                    tokens=export.num_tokens, pages=len(pairs),
+                    tick=self.tick))
 
     @property
     def has_work(self) -> bool:
@@ -279,4 +359,7 @@ class DPEngine:
                          for sh in self.shards],
             defers=[sh.engine.scheduler.defer_count for sh in self.shards],
             routing_costs=list(self.router.costs),
+            handoffs=len(self.handoffs),
+            handoff_pages=sum(h["pages"] for h in self.handoffs),
+            role_failovers=self.role_failovers,
         )

@@ -157,6 +157,12 @@ class EngineConfig:
     # support for the fork-aware cross-layout greedy comparison (see the
     # TIE_EPS note); off by default — rows are vocab_size floats per token.
     record_sample_logits: bool = False
+    # Disaggregation role (serving.dp_engine): "both" serves prefill and
+    # decode (colocated, the default); "prefill" only runs prompt chunks —
+    # a prompt-complete request goes quiet and awaits the DPEngine handoff;
+    # "decode" only receives handed-off requests (the router never places
+    # fresh arrivals here).
+    role: str = "both"
     seed: int = 0
 
 
@@ -222,6 +228,7 @@ class ShardHealth:
     preemption_count: int       # recompute preemptions (cumulative)
     used_units: int             # referenced pool units
     free_units: int             # unowned pool units
+    role: str = "both"          # disaggregation role (prefill/decode/both)
 
 
 @dataclasses.dataclass
@@ -275,13 +282,16 @@ class Engine:
         )
         if baseline:
             self._apply_baseline_semantics()
+        assert cfg.role in ("both", "prefill", "decode"), cfg.role
+        self.role = cfg.role
         self.scheduler = Scheduler(
             self.mgr, SchedulerConfig(
                 max_running=cfg.max_running,
                 chunk_size=cfg.chunk_size,
                 max_num_batched_tokens=cfg.max_num_batched_tokens,
                 max_prefill_tokens_per_step=cfg.max_prefill_tokens_per_step,
-                serial=cfg.batching_mode == "serial"))
+                serial=cfg.batching_mode == "serial",
+                prefill_only=cfg.role == "prefill"))
         self.autotuner = None
         if cfg.autotune_budgets:
             from .autotune import BudgetAutotuner
@@ -756,6 +766,7 @@ class Engine:
             preemption_count=self.scheduler.preemption_count,
             used_units=stats.used_units,
             free_units=stats.free_units,
+            role=self.role,
         )
 
     def outstanding_tokens(self) -> int:
@@ -806,6 +817,60 @@ class Engine:
             self.sample_log.pop(req.rid, None)
             req.reset_for_routing()
         return out
+
+    # --------------------------------------------- prefill->decode handoff
+    # The second shard-mode drain path: a prefill-only shard hands a
+    # prompt-complete request off to a decode shard at the prompt boundary.
+    # Unlike drain_requests (which resets progress for re-admission), the
+    # handoff preserves ALL progress: the typed page set is exported,
+    # device-copied into the destination's pools, and the request resumes
+    # there as a whole-prompt prefix hit with zero recomputed tokens.
+
+    def handoff_ready(self) -> List[Request]:
+        """Requests this prefill shard is done with: prompt fully computed,
+        first token sampled (the prefill chunk's own dispatch samples it),
+        and QUIET — no step still in the in-flight ring, so the device has
+        stopped mutating their pages and the catch-up checkpoints of any
+        suppressed boundaries have already been emitted."""
+        if self.role != "prefill":
+            return []
+        live = self._live_inflight_rids()
+        return [r for r in self.scheduler.running
+                if r.seq is not None and not r.in_prefill
+                and r.rid not in live]
+
+    def begin_handoff(self, req: Request):
+        """Detach a handoff-ready request and export its typed page set.
+        The request leaves the scheduler (nothing more is dispatched for
+        it); its pages stay resident here — IN_TRANSIT — while the copy
+        stream reads them. Returns the ``PageSetExport``."""
+        assert req in self.scheduler.running, req.rid
+        self.scheduler.running.remove(req)
+        return self.mgr.export_request(req.seq)
+
+    def complete_handoff(self, req: Request, export) -> None:
+        """Destination adopted the page set: release the export — the
+        source copies retire into THIS shard's prefix cache exactly like a
+        normal completion (future shared-prompt arrivals still hit here) —
+        and drop the runner mirrors. The request itself lives on at the
+        destination; it is not counted finished here."""
+        self.mgr.release_export(req.seq, export)
+        self.runner.forget(req.rid)
+
+    def cancel_handoff(self, req: Request, export) -> None:
+        """Adoption failed (destination pool pressure / death): lift the
+        transit marks and requeue the request here untouched — it shows up
+        in ``handoff_ready`` again next tick."""
+        self.mgr.cancel_export(export)
+        self.scheduler.running.append(req)
+
+    def set_role(self, role: str) -> None:
+        """Reassign the disaggregation role (colocated failover: prefill
+        shards flip to "both" when no decode-capable shard is alive).
+        Takes effect at the next ``schedule()`` call."""
+        assert role in ("both", "prefill", "decode"), role
+        self.role = role
+        self.scheduler.cfg.prefill_only = role == "prefill"
 
     # ----------------------------------------------------------------- run
     @property

@@ -146,11 +146,25 @@ class Router:
 
     # ---------------------------------------------------------- placement
     def place(self, req: Request, shards: Sequence, *,
-              readmitted: bool = False) -> int:
+              readmitted: bool = False,
+              want: Optional[str] = None) -> int:
         """Pick the shard for ``req``. Deterministic: cache-aware score
         (hit tokens minus health cost) first, least-loaded second, lowest
-        shard id third. Raises if no shard is accepting."""
+        shard id third. Raises if no shard is accepting.
+
+        ``want`` restricts candidates by disaggregation role:
+        ``"prefill"`` (fresh arrivals — prefill-capable shards) or
+        ``"decode"`` (handoff targets — decode-capable shards); colocated
+        ``"both"`` shards qualify for either. If no accepting shard has a
+        qualifying role the filter is DROPPED rather than failing — a
+        degraded fleet (all decode shards dead) keeps serving colocated."""
         cands = [i for i, sh in enumerate(shards) if sh.accepting]
+        if want is not None:
+            roled = [i for i in cands
+                     if getattr(shards[i].engine, "role", "both")
+                     in ("both", want)]
+            if roled:
+                cands = roled
         if not cands:
             raise RuntimeError("router: no accepting shard")
         policy = self.cfg.policy

@@ -266,6 +266,8 @@ class ModelRunner:
         self._zero_fn = None
         self._batch_copy_fns: Dict = {}
         self._batch_zero_fns: Dict = {}
+        self._xfer_fns: Dict = {}       # cross-runner handoff copies
+        self._xfer1_fn = None
         self._mirrors: Dict[str, _SeqMirror] = {}
         self._table_specs = {n: s for n, s in self.specs.items()
                              if s.kind not in ("mamba", "rwkv")}
@@ -940,6 +942,65 @@ class ModelRunner:
             self._zero_fn = jax.jit(z, static_argnums=(2,),
                                     donate_argnums=(0,))
         self.buffer = self._zero_fn(self.buffer, jnp.int32(eid * size), size)
+
+    def adopt_pages(self, src_runner: "ModelRunner",
+                    pairs: Sequence[Tuple[str, int, int]]) -> None:
+        """Prefill->decode handoff copy stream: install exported pages from
+        ANOTHER runner's unified buffer into this one, one batched
+        gather/scatter dispatch per KV type. The source buffer is captured
+        as a plain jit input — JAX arrays are immutable, so later
+        source-side dispatches rebind new arrays and cannot race this read
+        — and only the DESTINATION buffer is donated. Adopted pages are
+        deliberately kept out of the fresh-page zeroing queue: they carry
+        transferred content a later zeroing pass would destroy."""
+        if not pairs:
+            return
+        by_type: Dict[str, List[Tuple[int, int]]] = {}
+        for name, src, dst in pairs:
+            by_type.setdefault(name, []).append((src, dst))
+        s_total = src_runner.buffer.shape[-1]
+        d_total = self.buffer.shape[-1]
+        for name, group in by_type.items():
+            size = self.mgr.spec(name).page_units
+            if s_total % size or d_total % size:
+                for src, dst in group:   # misaligned pool: per-op fallback
+                    self._adopt_one(src_runner, name, src, dst)
+                continue
+            cap = _pow2(len(group))
+            srcs = np.zeros((cap,), np.int32)
+            dsts = np.full((cap,), d_total // size, np.int32)  # pad: OOB drop
+            for i, (src, dst) in enumerate(group):
+                srcs[i] = src
+                dsts[i] = dst
+            fn = self._xfer_fns.get((size, cap))
+            if fn is None:
+                def xf(dst_buf, src_buf, srcs, dsts, size_s):
+                    blk = jnp.take(src_buf.reshape(-1, size_s), srcs, axis=0)
+                    rows = dst_buf.reshape(-1, size_s)
+                    rows = rows.at[dsts].set(blk, mode="drop",
+                                             unique_indices=False)
+                    return rows.reshape(dst_buf.shape)
+                fn = jax.jit(xf, static_argnums=(4,), donate_argnums=(0,))
+                self._xfer_fns[(size, cap)] = fn
+            self.buffer = fn(self.buffer, src_runner.buffer,
+                             jnp.asarray(srcs), jnp.asarray(dsts), size)
+
+    def _adopt_one(self, src_runner: "ModelRunner", type_name: str,
+                   src: int, dst: int) -> None:
+        """Misaligned-pool fallback: one cross-buffer page copy."""
+        size = self.mgr.spec(type_name).page_units
+        if self._xfer1_fn is None:
+            def xf1(dst_buf, src_buf, off_src, off_dst, size_s):
+                blk = jax.lax.dynamic_slice(
+                    src_buf.reshape(-1), (off_src,), (size_s,))
+                flat = jax.lax.dynamic_update_slice(
+                    dst_buf.reshape(-1), blk, (off_dst,))
+                return flat.reshape(dst_buf.shape)
+            self._xfer1_fn = jax.jit(xf1, static_argnums=(4,),
+                                     donate_argnums=(0,))
+        self.buffer = self._xfer1_fn(
+            self.buffer, src_runner.buffer,
+            jnp.int32(src * size), jnp.int32(dst * size), size)
 
     def copy_page(self, type_name: str, src: int, dst: int) -> None:
         """Device copy of one whole small page (state checkpoint/restore)."""

@@ -76,6 +76,11 @@ class SchedulerConfig:
     max_prefill_tokens_per_step: Optional[int] = None
     max_preemptions: int = 100
     serial: bool = False            # legacy one-prefill-per-step schedule
+    # Disaggregated serving: a prefill-only shard never schedules decode
+    # rows. A request whose prompt completes (its first token sampled by
+    # the prefill chunk's own dispatch) simply goes quiet and waits for the
+    # DPEngine handoff to move it to a decode shard.
+    prefill_only: bool = False
 
 
 @dataclasses.dataclass
@@ -212,6 +217,10 @@ class Scheduler:
                     >= req.sampling.max_new_tokens)
 
         schedulable = [r for r in self.running if not will_finish(r)]
+        if self.cfg.prefill_only:
+            # prefill shard: requests past their prompt await handoff
+            schedulable = [r for r in schedulable
+                           if c_eff(r) < len(r.prompt)]
 
         # 2) pack candidates under the token budget: decodes first (they are
         #    latency-critical and cheap), then prefill chunks FIFO.

@@ -420,6 +420,130 @@ def test_fuzz_dp_indefinite_stall_escalates():
     assert_greedy_equiv(solo_eng, dp, label="dp-escalate")
 
 
+# ------------------------------------------- prefill/decode disaggregation
+# Shard 0 prefill-only, the rest decode-only: prompts are computed on the
+# prefill shard, then the typed page set is exported, copied across, and
+# adopted by a decode shard as a whole-prompt prefix hit. Invariants: the
+# split fleet matches one solo engine per request (fork-aware), decode
+# shards compute ZERO prefill tokens, every shard drains leak-free (the
+# pagesan CI leg also checks no page is lost in transit), and a crash on
+# either side of the handoff falls back to recompute with exactly-once
+# finishes. REPRO_DISAGG=1 (the tier-1 disagg CI leg) widens the sweep.
+
+def _disagg_seeds():
+    return ([21, 22, 23, 24, 25] if os.environ.get("REPRO_DISAGG")
+            else [21, 22])
+
+
+def run_disagg(arch, workload, *, n_shards=2, pool=8 << 20, caching=True,
+               budget=64):
+    model, cfg, params = get_model(arch)
+    dp = DPEngine(model, EngineConfig(
+        kv_pool_bytes=pool, max_running=4, chunk_size=8,
+        max_num_batched_tokens=budget, enable_prefix_caching=caching,
+        record_sample_logits=True),
+        params=params, num_shards=n_shards, split_pool=False,
+        roles=["prefill"] + ["decode"] * (n_shards - 1))
+    outs = drive_dp(dp, workload)
+    check_drained_dp(dp, len(workload))
+    if dp.fleet_stats()["role_failovers"] == 0:
+        # roles held for the whole run: decode shards never computed a
+        # prefill token — the zero-recompute half of the handoff contract
+        for sh in dp.shards[1:]:
+            pf = sum(m.prefill_tokens for m in sh.engine.metrics)
+            assert pf == 0, (sh.sid, pf)
+    return dp, outs
+
+
+@pytest.mark.parametrize("seed", _disagg_seeds())
+def test_fuzz_disagg_equals_solo(seed):
+    """Seeded workloads through a prefill/decode split fleet == one solo
+    engine per request, with handoffs actually firing and drain
+    invariants (leaks, lost-in-transit) on both sides of the split."""
+    rng = random.Random(8800 + seed)
+    _, cfg, _ = get_model("granite-3-2b")
+    wl = gen_workload(rng, cfg, n_lo=5, n_hi=8, p_hi=24)
+    solo_eng, solo = run_mode("granite-3-2b", wl)
+    dp, _ = run_disagg("granite-3-2b", wl, n_shards=2 + seed % 2)
+    assert dp.handoffs, "disagg fuzz produced no handoffs"
+    assert_greedy_equiv(solo_eng, dp, label=f"disagg-seed{seed}")
+
+
+def test_fuzz_disagg_decode_crash_recovers():
+    """The only decode shard dies while handoffs are landing on it: its
+    requests fail over (PR-8 recompute), the prefill shard flips to
+    colocated so prompt-complete requests are not stranded, and every
+    request finishes exactly once with the solo outputs."""
+    rng = random.Random(6161)
+    _, cfg, _ = get_model("granite-3-2b")
+    wl = gen_workload(rng, cfg, n_lo=6, n_hi=8, p_hi=24)
+    for spec in wl:
+        spec["arrival"] = 0
+        spec["max_new_tokens"] = rng.randint(6, 12)
+        spec["eos_token"] = None
+    solo_eng, _ = run_mode("granite-3-2b", wl)
+    model, _, params = get_model("granite-3-2b")
+    dp = DPEngine(model, EngineConfig(
+        kv_pool_bytes=8 << 20, max_running=4, chunk_size=8,
+        max_num_batched_tokens=64, record_sample_logits=True),
+        params=params, num_shards=2, split_pool=False,
+        roles=["prefill", "decode"])
+    for spec in sorted(wl, key=lambda s: s["rid"]):
+        dp.submit(build_request(spec))
+    dp.step()
+    dp.step()                           # handoffs have landed on shard 1
+    assert dp.handoffs, "injection too late — nothing handed off yet"
+    crashed = dp.inject_crash(1)
+    assert crashed, "crash drained nothing"
+    assert dp.shards[1].engine.mgr.memory_stats().used_units == 0
+    guard = 0
+    while dp.has_work:
+        dp.step()
+        guard += 1
+        assert guard < 3000
+    check_drained_dp(dp, len(wl))
+    # stranded prompt-complete requests forced the colocated fallback
+    assert dp.fleet_stats()["role_failovers"] >= 1
+    assert dp.shards[0].engine.role == "both"
+    assert_greedy_equiv(solo_eng, dp, label="disagg-crash-decode")
+
+
+def test_fuzz_disagg_prefill_crash_recovers():
+    """The prefill shard dies mid-run: in-flight and quiet prompt-complete
+    requests (abandoned exports included — their pages drain with the
+    dead shard) re-place onto the decode shard, which computes their
+    prefill itself (the role filter is dropped when nothing qualifies).
+    Exactly-once finishes, solo outputs, zero pages on the dead shard."""
+    rng = random.Random(7272)
+    _, cfg, _ = get_model("granite-3-2b")
+    wl = gen_workload(rng, cfg, n_lo=6, n_hi=8, p_hi=24)
+    for spec in wl:
+        spec["arrival"] = 0
+        spec["max_new_tokens"] = rng.randint(6, 12)
+        spec["eos_token"] = None
+    solo_eng, _ = run_mode("granite-3-2b", wl)
+    model, _, params = get_model("granite-3-2b")
+    dp = DPEngine(model, EngineConfig(
+        kv_pool_bytes=8 << 20, max_running=4, chunk_size=8,
+        max_num_batched_tokens=64, record_sample_logits=True),
+        params=params, num_shards=2, split_pool=False,
+        roles=["prefill", "decode"])
+    for spec in sorted(wl, key=lambda s: s["rid"]):
+        dp.submit(build_request(spec))
+    dp.step()
+    crashed = dp.inject_crash(0)
+    assert crashed, "crash drained nothing"
+    assert dp.shards[0].engine.mgr.memory_stats().used_units == 0
+    guard = 0
+    while dp.has_work:
+        dp.step()
+        guard += 1
+        assert guard < 3000
+    check_drained_dp(dp, len(wl))
+    assert not dp.shards[0].engine.scheduler.has_work()
+    assert_greedy_equiv(solo_eng, dp, label="disagg-crash-prefill")
+
+
 # ------------------------------------------------- hypothesis (optional)
 def test_fuzz_hypothesis_async_equals_sync():
     """Property form of the harness: hypothesis drives the same generator

@@ -199,6 +199,71 @@ def test_windowed_cached_table_entry_allowed():
         m.sanitizer.check_dispatch(arrs)    # now actually FREE: caught
 
 
+# -------------------------------------------------- handoff / in-transit
+def test_export_release_roundtrip_clean():
+    """Clean handoff source side: export moves every page to IN_TRANSIT
+    (verify accepts the pool's USED for it), release returns them to plain
+    ownership and retires the request into the prefix cache — drained."""
+    m = mk_mgr(specs_state())
+    r = run_req(m, n=8)
+    export = m.export_request(r)
+    m.check_invariants()            # shadow IN_TRANSIT vs pool USED: legal
+    m.release_export(r, export)
+    m.sanitizer.assert_drained()
+    m.check_invariants()
+
+
+def test_lost_in_transit_caught_at_drain():
+    """An export never released nor cancelled is a mid-handoff crash that
+    leaked its pages — drain reports them as lost-in-transit, with the
+    owner and export site, distinct from a generic leak."""
+    m = mk_mgr(specs_attn())
+    r = run_req(m, rid="crashed")
+    m.export_request(r)
+    with pytest.raises(PageSanError) as ei:
+        m.sanitizer.assert_drained()
+    msg = str(ei.value)
+    assert "lost-in-transit" in msg and "LOST IN TRANSIT" in msg
+    assert "crashed" in msg and "exported_at" in msg
+
+
+def test_free_of_in_transit_page_caught():
+    """The copy stream still reads exported pages: freeing one mid-handoff
+    is use-after-free on the destination. Cancel lifts the marks and the
+    source frees normally."""
+    m = mk_mgr(specs_attn())
+    r = run_req(m)
+    export = m.export_request(r)
+    eid = r.page_tables["full_attn"][0]
+    with pytest.raises(PageSanError, match="exported for handoff"):
+        m.pools["full_attn"].free(eid)
+    m.cancel_export(export)         # failover path: source keeps ownership
+    m.free_request(r, cache=False)
+    m.sanitizer.assert_drained()
+    m.check_invariants()
+
+
+def test_double_export_caught():
+    """One page set, one handoff: exporting a page already in transit
+    means two destinations would copy from (and then own) it."""
+    m = mk_mgr(specs_attn())
+    r = run_req(m)
+    m.export_request(r)
+    with pytest.raises(PageSanError, match="double export"):
+        m.export_request(r)
+
+
+def test_double_adopt_caught():
+    """Completing the same export twice (release after cancel) means the
+    handoff was adopted on two destinations."""
+    m = mk_mgr(specs_attn())
+    r = run_req(m)
+    export = m.export_request(r)
+    m.cancel_export(export)
+    with pytest.raises(PageSanError, match="export completion"):
+        m.cancel_export(export)
+
+
 def test_verify_detects_shadow_pool_divergence():
     m = mk_mgr(specs_attn())
     r = run_req(m)
@@ -276,6 +341,75 @@ def test_engine_gather_from_freed_caught(monkeypatch):
     with pytest.raises(PageSanError, match="gather-from-freed"):
         for _ in range(50):
             eng.step()
+
+
+# ----------------------------------------- deferred catch-up checkpoints
+class SmallInterval:
+    """Model proxy: same geometry, state checkpoints every ``interval``
+    tokens. ``state_checkpoint_interval`` does not enter page_units, so
+    only checkpoint cadence changes — the reduced models' default of 512
+    never crosses a boundary inside a small engine test."""
+
+    def __init__(self, model, interval=8):
+        self._m, self._iv = model, interval
+
+    def __getattr__(self, k):
+        return getattr(self._m, k)
+
+    def kv_specs(self):
+        import dataclasses
+        return tuple(
+            dataclasses.replace(s, state_checkpoint_interval=self._iv)
+            if s.kind in ("mamba", "rwkv") else s
+            for s in self._m.kv_specs())
+
+
+def test_deferred_checkpoints_catch_up_at_depth4(monkeypatch):
+    """Depth >= 3 suppresses state-checkpoint copies at boundary crossings
+    (the live page runs ahead of the boundary under deep pipelining) —
+    but suppressed boundaries must be DEFERRED, not dropped: a catch-up
+    snapshot fires at the next quiet advance, so a long-decode run ends
+    with the same checkpoint set as the sync engine. At depth <= 2 the
+    machinery is a provable no-op. Outputs are bit-identical throughout
+    (checkpoints feed the prefix cache, never the compute)."""
+    from conftest import get_model
+    from repro.serving import Engine, EngineConfig
+
+    monkeypatch.setenv("REPRO_PAGE_SANITIZER", "1")
+    model, _, params = get_model("zamba2-1.2b")
+    pm = SmallInterval(model)
+    base = dict(kv_pool_bytes=8 << 20, max_running=4, chunk_size=8,
+                max_num_batched_tokens=64)
+
+    def run(depth):
+        kw = dict(base)
+        if depth > 1:
+            kw.update(async_scheduling=True, pipeline_depth=depth)
+        eng = Engine(pm, EngineConfig(**kw), params=params)
+        for i in range(3):
+            eng.submit(Request(rid=f"r{i}", prompt=[7 + i, 3, 9, 2 + i],
+                               sampling=SamplingParams(max_new_tokens=40)))
+        eng.run_until_done()
+        out = {r.rid: list(r.output) for r in eng.finished}
+        ckpt_hashes = {
+            name: sorted(pool.cached)
+            for name, pool in eng.mgr.pools.items()
+            if eng.mgr.spec(name).kind in ("mamba", "rwkv")}
+        eng.mgr.sanitizer.assert_drained()
+        eng.mgr.check_invariants()
+        return (out, ckpt_hashes, eng.mgr.suppressed_checkpoints,
+                eng.mgr.catchup_checkpoints)
+
+    o1, ck1, sup1, cu1 = run(1)
+    o2, ck2, sup2, cu2 = run(2)
+    o4, ck4, sup4, cu4 = run(4)
+    assert o1 == o2 == o4                       # bit-identical outputs
+    assert sup1 == cu1 == 0                     # sync never suppresses
+    assert sup2 == cu2 == 0                     # depth 2: provable no-op
+    assert sup4 > 0, "depth 4 never suppressed a boundary — dead test"
+    assert cu4 == sup4, (sup4, cu4)             # every deferral caught up
+    # the prefix cache ends with the SAME checkpoint hashes as sync
+    assert ck4 == ck1, {k: (len(ck1[k]), len(ck4[k])) for k in ck1}
 
 
 def test_engine_leak_caught_at_drain(monkeypatch):

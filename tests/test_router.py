@@ -31,13 +31,15 @@ def _req(rid, prompt, out=4, eos=None):
                                            eos_token=eos))
 
 
-def _dp(arch="granite-3-2b", n=2, policy=ROUTE_CACHE_AWARE, **cfg_kw):
+def _dp(arch="granite-3-2b", n=2, policy=ROUTE_CACHE_AWARE, roles=None,
+        **cfg_kw):
     model, cfg, params = get_model(arch)
     kw = dict(kv_pool_bytes=8 << 20, max_running=4, chunk_size=8,
               max_num_batched_tokens=64, record_sample_logits=True)
     kw.update(cfg_kw)
     return DPEngine(model, EngineConfig(**kw), params=params,
-                    num_shards=n, policy=policy, split_pool=False)
+                    num_shards=n, policy=policy, split_pool=False,
+                    roles=roles)
 
 
 # ------------------------------------------------------------- placement
@@ -319,3 +321,184 @@ def test_fleet_autotuned_budgets_per_shard():
     dp.submit(_req("a", [1, 2, 3, 4], out=3))
     dp.run_until_done()
     assert len(dp.finished) == 1
+
+
+# --------------------------------------- prefill/decode disaggregation
+def _mk_mgr_pair(n_large_src=16, n_large_dst=16):
+    """Two standalone managers sharing a spec set — a prefill shard's and a
+    decode shard's pools, without the engines around them."""
+    from repro.core import (BYTES_PER_UNIT, JengaKVCacheManager,
+                            attention_spec, make_geometry, mamba_spec)
+    specs = [attention_spec("full_attn", num_layers=2, kv_heads=1,
+                            head_dim=64, tokens_per_page=4),
+             mamba_spec("ssm", num_layers=2, conv_units=64, ssm_units=64,
+                        checkpoint_interval=4)]
+    g = make_geometry(specs, total_memory_bytes=10**9)
+
+    def mk(n_large):
+        return JengaKVCacheManager(
+            specs, total_memory_bytes=g.large_page_units * n_large *
+            BYTES_PER_UNIT)
+    return mk(n_large_src), mk(n_large_dst)
+
+
+def test_export_adopt_roundtrip():
+    """Manager-level handoff: export a computed request's typed page set,
+    adopt it on a second manager. The destination mirrors the tables,
+    registers the same hashes, resumes at the same position with zero
+    tokens left to recompute — and both sides drain clean."""
+    from repro.core import SequenceState
+    src, dst = _mk_mgr_pair()
+    r = SequenceState(rid="h0", tokens=list(range(100, 112)))
+    ok, _ = src.begin_request(r)
+    assert ok
+    assert src.allocate_for_tokens(r, 12)
+    src.advance(r, 12)
+    export = src.export_request(r)
+    assert export.num_tokens == 12
+
+    r2 = SequenceState(rid="h0", tokens=list(r.tokens))
+    ok, pairs = dst.adopt_request(r2, export)
+    assert ok and pairs
+    # position restored: nothing to recompute, chains continue verbatim
+    assert r2.num_computed == 12 and r2.prefix_hit_tokens == 12
+    assert len(r2.page_tables["full_attn"]) == len(r.page_tables["full_attn"])
+    assert r2.page_hashes == r.page_hashes
+    # every copy pair reads a USED source page into a USED dest page
+    for name, s_eid, d_eid in pairs:
+        from repro.core import PageState
+        assert src.pools[name].pages[s_eid].state == PageState.USED
+        assert dst.pools[name].pages[d_eid].state == PageState.USED
+    assert dst.handoff_adopted == 1
+    assert dst.handoff_pages_adopted == len(pairs)
+
+    # decode continues on the destination as if it computed the prefill
+    assert dst.allocate_for_tokens(r2, 14)
+    r2.tokens.extend([7, 8])
+    dst.advance(r2, 14)
+    dst.free_request(r2, cache=True)
+    # source side: release retires its copy into the prefix cache
+    src.release_export(r, export)
+    assert src.memory_stats().used_units == 0
+    assert dst.memory_stats().used_units == 0
+    src.check_invariants()
+    dst.check_invariants()
+    # both caches now serve the prompt: a fresh same-prompt arrival hits
+    for m in (src, dst):
+        probe = SequenceState(rid="p", tokens=list(range(100, 112)))
+        assert m.lookup_prefix(probe) > 0, "adopted hashes not registered"
+
+
+def test_adopt_failure_rolls_back():
+    """Destination pool pressure mid-adopt: every allocation is undone,
+    the request is cleared, and the source cancels back to normal
+    ownership — the §5.4 transaction across a shard boundary."""
+    from repro.core import SequenceState
+    src, dst = _mk_mgr_pair(n_large_dst=1)     # destination cannot fit it
+    r = SequenceState(rid="h1", tokens=list(range(100, 124)))
+    ok, _ = src.begin_request(r)
+    assert ok
+    assert src.allocate_for_tokens(r, 24)
+    src.advance(r, 24)
+    export = src.export_request(r)
+
+    before = dst.memory_stats()
+    r2 = SequenceState(rid="h1", tokens=list(r.tokens))
+    ok, pairs = dst.adopt_request(r2, export)
+    assert not ok and pairs == []
+    after = dst.memory_stats()
+    assert after.used_units == before.used_units == 0, (before, after)
+    assert not r2.page_tables and not r2.state_pages and not r2.ckpt_pages
+    assert r2.num_computed == 0
+    dst.check_invariants()
+    # failover: the source cancels the export and keeps running
+    src.cancel_export(export)
+    src.free_request(r, cache=False)
+    assert src.memory_stats().used_units == 0
+    src.check_invariants()
+
+
+def test_place_role_filter_and_fallback():
+    """``want`` restricts placement to role-compatible shards; when no
+    accepting shard qualifies the filter is dropped, not fatal — a
+    degraded fleet keeps serving colocated."""
+    dp = _dp(n=3, roles=["prefill", "decode", "decode"])
+    assert dp.router.place(_req("a", [1, 2, 3]), dp.shards,
+                           want="prefill") == 0
+    assert dp.router.place(_req("b", [1, 2, 3]), dp.shards,
+                           want="decode") in (1, 2)
+    dp.shards[1].accepting = False
+    dp.shards[2].accepting = False
+    # no decode-capable shard accepting: fall back to whoever is
+    assert dp.router.place(_req("c", [1, 2, 3]), dp.shards,
+                           want="decode") == 0
+
+
+def test_disagg_zero_decode_prefill_and_matches_solo():
+    """The tentpole contract: a prefill/decode split fleet finishes every
+    request with the solo engine's greedy tokens, the decode shard
+    computes ZERO prefill tokens (handoff admits whole-prompt hits), the
+    handoff log is populated, and both shards drain leak-free."""
+    rng = random.Random(7)
+    reqs = [(f"r{i}",
+             [rng.randint(0, 49) for _ in range(rng.randint(4, 20))],
+             rng.randint(2, 5))
+            for i in range(5)]
+    solo, _ = make_engine(max_num_batched_tokens=64,
+                          record_sample_logits=True)
+    for rid, prompt, out in reqs:
+        solo.submit(_req(rid, prompt, out=out))
+    solo.run_until_done()
+
+    dp = _dp(n=2, roles=["prefill", "decode"])
+    for rid, prompt, out in reqs:
+        dp.submit(_req(rid, prompt, out=out))
+    dp.run_until_done()
+    dp.check_invariants()
+    assert len(dp.finished) == len(reqs)
+    assert dp.handoffs, "no handoffs happened — disagg never engaged"
+    fs = dp.fleet_stats()
+    assert fs["handoffs"] == len(dp.handoffs)
+    assert fs["handoff_pages"] > 0
+    # decode shard never computed a prefill token
+    dec = dp.shards[1].engine
+    assert sum(m.prefill_tokens for m in dec.metrics) == 0
+    # prefill shard never decoded: every handed-off request left at
+    # exactly its prompt boundary (t0 sampled, zero decode steps)
+    for h in dp.handoffs:
+        prompt = next(p for rid, p, _ in reqs if rid == h["rid"])
+        assert h["tokens"] == len(prompt), h
+    for sh in dp.shards:
+        assert sh.engine.mgr.memory_stats().used_units == 0, sh.sid
+        assert not sh.engine.runner._mirrors
+    assert_greedy_equiv(solo, dp, label="disagg")
+
+
+def test_disagg_all_decode_dead_falls_back_colocated():
+    """Failover: every decode-capable shard dies while prefill-complete
+    requests await handoff — the fleet flips the surviving prefill shard
+    to colocated ("both") and still finishes everything exactly once."""
+    rng = random.Random(23)
+    reqs = [(f"r{i}",
+             [rng.randint(0, 49) for _ in range(rng.randint(6, 16))], 4)
+            for i in range(4)]
+    solo, _ = make_engine(max_num_batched_tokens=64,
+                          record_sample_logits=True)
+    for rid, prompt, out in reqs:
+        solo.submit(_req(rid, prompt, out=out))
+    solo.run_until_done()
+
+    dp = _dp(n=2, roles=["prefill", "decode"])
+    for rid, prompt, out in reqs:
+        dp.submit(_req(rid, prompt, out=out))
+    dp.step()
+    dp.inject_crash(1)                  # the only decode shard dies
+    dp.run_until_done()
+    assert dp.fleet_stats()["role_failovers"] >= 1
+    assert dp.shards[0].engine.role == "both"   # flipped to colocated
+    rids = [r.rid for r in dp.finished]
+    assert sorted(rids) == sorted(r[0] for r in reqs)
+    assert len(rids) == len(set(rids))
+    for sh in dp.shards:
+        assert sh.engine.mgr.memory_stats().used_units == 0, sh.sid
+    assert_greedy_equiv(solo, dp, label="disagg-failover")
